@@ -1,0 +1,23 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10
+              ) -> Tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, out          # microseconds per call
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

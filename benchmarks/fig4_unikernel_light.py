@@ -1,0 +1,73 @@
+"""Paper Fig. 4 — unikernel resource usage on the stream (data-science) task.
+
+The paper compares Unikraft / OSv / Nanos running Fitbit analytics.  The
+TPU-side analogue compares three *specialization levels* of the AOT image
+for the same analytics kernel — the axis the unikernels differ on is how
+much generality they strip:
+
+  unikraft-like : fully specialized — AOT + donated state (in-place)
+  nanos-like    : AOT, no donation (state copied each step)
+  osv-like      : general jit path (retains tracing/dispatch machinery)
+
+Reported: per-dispatch wall time + compiled-footprint bytes (RAM analogue)
++ build ("boot") time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, time_call
+from repro.core import ExecutableImage, UnikernelExecutor, Workload, \
+    WorkloadKind
+from repro.data import stream as stream_lib
+
+
+def _args(scfg):
+    state = stream_lib.init_state(scfg)
+    rec = next(stream_lib.make_record_stream(scfg))
+    batch = {k: jnp.asarray(v) for k, v in rec.items()}
+    return state, batch
+
+
+def run() -> list[str]:
+    scfg = stream_lib.StreamConfig(num_users=64, batch_records=256)
+    rows = []
+    w = Workload("fitbit", WorkloadKind.STREAM)
+
+    # unikraft-like: AOT + donation — streaming threads the returned state
+    state, batch = _args(scfg)
+    img = ExecutableImage.build("uk", stream_lib.analytics_step,
+                                (state, batch), donate_argnums=(0,))
+    ex = UnikernelExecutor("unikraft-like", img)
+    cur = {"state": stream_lib.init_state(scfg)}
+
+    def once():
+        cur["state"], out = ex.dispatch(w, (cur["state"], batch))
+        return out
+    us, _ = time_call(once, iters=20)
+    rows.append(csv_line("fig4/unikraft-like", us,
+                         f"footprint={img.footprint_bytes};"
+                         f"build_s={img.build_time_s:.3f}"))
+
+    # nanos-like: AOT, no donation
+    state, batch = _args(scfg)
+    img2 = ExecutableImage.build("nanos", stream_lib.analytics_step,
+                                 (state, batch))
+    ex2 = UnikernelExecutor("nanos-like", img2)
+    us2, _ = time_call(lambda: ex2.dispatch(w, (state, batch)), iters=20)
+    rows.append(csv_line("fig4/nanos-like", us2,
+                         f"footprint={img2.footprint_bytes};"
+                         f"build_s={img2.build_time_s:.3f}"))
+
+    # osv-like: plain jit (keeps general dispatch machinery)
+    fn = jax.jit(stream_lib.analytics_step)
+    fn(state, batch)
+    us3, _ = time_call(lambda: fn(state, batch), iters=20)
+    rows.append(csv_line("fig4/osv-like", us3,
+                         f"footprint={img2.footprint_bytes};build_s=n/a"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Paper Fig. 6 — data-processing time (lower is better).
+
+6a: CV apps on the container class (Car < Face < Body < Object order);
+6b: stream task on unikernel-class executors;
+6c: the same stream task on container-class executors.
+
+The paper's trade-off (C2): containers process faster, unikernels use fewer
+resources.  We report wall microseconds per dispatch for all three panels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, time_call
+from benchmarks import fig3_container_heavy
+from repro.core import ExecutableImage, UnikernelExecutor, Workload, \
+    WorkloadKind
+from repro.data import stream as stream_lib
+
+
+def run() -> list[str]:
+    rows = []
+    # 6a — CV on containers (reuse fig3 machinery, report time only)
+    for line in fig3_container_heavy.run():
+        name, us, derived = line.split(",", 2)
+        rows.append(csv_line(name.replace("fig3/", "fig6a/"), float(us),
+                             "container"))
+
+    # 6b — stream on unikernel
+    scfg = stream_lib.StreamConfig(num_users=64, batch_records=256)
+    state = stream_lib.init_state(scfg)
+    rec = {k: jnp.asarray(v) for k, v in
+           next(stream_lib.make_record_stream(scfg)).items()}
+    img = ExecutableImage.build("uk", stream_lib.analytics_step,
+                                (state, rec))
+    ex = UnikernelExecutor("uk", img)
+    w = Workload("fitbit", WorkloadKind.STREAM)
+    us_u, _ = time_call(lambda: ex.dispatch(w, (state, rec)), iters=30)
+    rows.append(csv_line("fig6b/unikernel_stream", us_u, "unikernel"))
+
+    # 6c — same stream task on container (general jit path)
+    fn = jax.jit(stream_lib.analytics_step)
+    fn(state, rec)
+    us_c, _ = time_call(lambda: jax.block_until_ready(fn(state, rec)),
+                        iters=30)
+    rows.append(csv_line("fig6c/container_stream", us_c,
+                         f"container;ratio_vs_unikernel={us_c / us_u:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

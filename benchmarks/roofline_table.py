@@ -1,0 +1,38 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Emits one CSV row per (arch × shape) cell on the single-pod mesh:
+``rooline/<arch>/<shape>, <dominant_term_seconds*1e6>, terms+bottleneck``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "artifacts")
+
+
+def run() -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.16x16.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok") or rec.get("skipped") or "roofline" not in rec:
+            continue
+        ro = rec["roofline"]
+        dom_s = max(ro["compute_s"], ro["memory_fused_s"],
+                    ro["collective_s"])
+        rows.append(
+            f"roofline/{rec['arch']}/{rec['shape']},{dom_s * 1e6:.0f},"
+            f"compute_s={ro['compute_s']:.4f};"
+            f"memory_fused_s={ro['memory_fused_s']:.4f};"
+            f"memory_projected_s={ro['memory_projected_s']:.4f};"
+            f"collective_s={ro['collective_s']:.4f};"
+            f"bottleneck={ro['bottleneck']};"
+            f"useful_ratio={ro['useful_flops_ratio']:.3f};"
+            f"frac_of_roofline={ro['compute_s'] / dom_s:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Benchmark driver — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables (the scale-side
+"figures") are produced from the dry-run artifacts by
+``benchmarks/roofline_table.py`` since they derive from compiled programs,
+not wall time.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_container_heavy, fig4_unikernel_light,
+                            fig5_hybrid_saving, fig6_processing_time,
+                            fig7_orchestration)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (fig3_container_heavy, fig4_unikernel_light,
+                fig5_hybrid_saving, fig6_processing_time,
+                fig7_orchestration):
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{mod.__name__},ERROR,", flush=True)
+            traceback.print_exc()
+    # roofline summary (table form of EXPERIMENTS.md §Roofline)
+    try:
+        from benchmarks import roofline_table
+        for line in roofline_table.run():
+            print(line, flush=True)
+    except Exception:  # noqa: BLE001
+        ok = False
+        print("benchmarks.roofline_table,ERROR,", flush=True)
+        traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

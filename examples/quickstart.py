@@ -1,0 +1,48 @@
+"""Quickstart: build a model, train a few steps, serve a prompt.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.data.tokens import make_lm_iterator
+from repro.launch.mesh import make_test_mesh
+from repro.serving.engine import ServingEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    # 1) pick an architecture (any of the 10 assigned, reduced for CPU)
+    cfg = get_reduced_config("tinyllama-1.1b", num_layers=2, d_model=64,
+                             head_dim=16, d_ff=128, vocab_size=128)
+    print(f"arch={cfg.name} params={cfg.num_params():,}")
+
+    # 2) train a few steps
+    from repro.launch.programs import TrainConfig
+    from repro.optim import adamw, schedule
+    tcfg = TrainConfig(adamw=adamw.AdamWConfig(lr=3e-3),
+                       sched=schedule.ScheduleConfig(warmup_steps=5,
+                                                     decay_steps=200))
+    trainer = Trainer(cfg, make_test_mesh(), tcfg,
+                      run_cfg=TrainerConfig(ckpt_dir="/tmp/quickstart_ckpt",
+                                            ckpt_every=0))
+    trainer.initialize(restore=False)
+    data = make_lm_iterator(cfg, batch_size=8, seq_len=32)
+    hist = trainer.fit(data, num_steps=20)
+    print(f"loss: {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}")
+
+    # 3) serve with continuous batching
+    engine = ServingEngine(cfg, max_slots=2, max_seq=64,
+                           params=trainer.params)
+    engine.submit(np.arange(8) % cfg.vocab_size, max_new_tokens=8)
+    engine.submit(np.arange(5) % cfg.vocab_size, max_new_tokens=8)
+    for req in engine.run_until_drained():
+        print(f"request {req.rid}: generated {req.generated}")
+
+
+if __name__ == "__main__":
+    main()

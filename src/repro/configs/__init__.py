@@ -1,0 +1,44 @@
+"""Config registry: ``get_config("mixtral-8x7b")`` → ModelConfig.
+
+One module per assigned architecture; each exports ``CONFIG``.  ``reduced()``
+from models.config shrinks any of them to smoke-test size.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, reduced  # re-export
+
+_MODULES = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    # the paper's own workload pair (heavy CV-analogue / light stream)
+    "edge-cv-heavy": "repro.configs.edge_paper",
+    "edge-stream-light": "repro.configs.edge_paper",
+}
+
+_ATTR = {"edge-cv-heavy": "CV_HEAVY", "edge-stream-light": "STREAM_LIGHT"}
+
+
+def list_archs() -> List[str]:
+    return [k for k in _MODULES if not k.startswith("edge-")]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return getattr(mod, _ATTR.get(name, "CONFIG"))
+
+
+def get_reduced_config(name: str, **overrides) -> ModelConfig:
+    return reduced(get_config(name), **overrides)

@@ -1,0 +1,31 @@
+"""The paper's contribution as a composable runtime (DESIGN.md §2).
+
+Public surface:
+    Workload, WorkloadKind, WorkloadClass, classify      — P2
+    ResourceMonitor, NodeCapacity                        — P3
+    ContainerExecutor, UnikernelExecutor, ExecutableImage — P1
+    Orchestrator, placement policies                     — P4
+    ConfigurationManager                                 — fig 2
+"""
+from repro.core.executor import (BaseExecutor, ContainerExecutor,
+                                 ExecutableImage, ExecutorClass,
+                                 IncompatibleWorkload, UnikernelExecutor)
+from repro.core.manager import ConfigurationManager, DispatchResult
+from repro.core.orchestrator import (BinPackPolicy, LeastLoadedPolicy,
+                                     Orchestrator, PlacementError,
+                                     RoundRobinPolicy, POLICIES)
+from repro.core.registry import ImageRegistry
+from repro.core.resources import NodeCapacity, ResourceMonitor
+from repro.core.scheduler import SpeculativeRunner, WorkQueue
+from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
+                                 WorkloadKind, classify)
+
+__all__ = [
+    "BaseExecutor", "ContainerExecutor", "ExecutableImage", "ExecutorClass",
+    "IncompatibleWorkload", "UnikernelExecutor", "ConfigurationManager",
+    "DispatchResult", "Orchestrator", "PlacementError", "RoundRobinPolicy",
+    "LeastLoadedPolicy", "BinPackPolicy", "POLICIES", "ImageRegistry",
+    "NodeCapacity", "ResourceMonitor", "SpeculativeRunner", "WorkQueue",
+    "ClassifierConfig", "Workload", "WorkloadClass", "WorkloadKind",
+    "classify",
+]

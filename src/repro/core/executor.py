@@ -1,0 +1,201 @@
+"""Executor classes — the paper's container/unikernel split on TPU (P1).
+
+ContainerExecutor  (≙ Docker/Podman/Singularity)
+    General-purpose: holds live params, serves *any* compatible entry point
+    (train/prefill/decode/generic), traces+compiles new shapes on demand
+    (feature-rich, fast dispatch after warmup, biggest footprint).
+
+UnikernelExecutor  (≙ Unikraft/OSv/Nanos)
+    Single-purpose: ONE ahead-of-time-compiled ``ExecutableImage`` with
+    frozen (shape, dtype, sharding); donated buffers; no retrace path — a
+    workload that doesn't match the image is REJECTED (the paper's
+    "unikernels are not ready for image processing": C3 by construction).
+    Build ≙ unikernel compile; the registry caches images like an OCI
+    registry caches layers.
+
+Both execute on a ``mesh`` (their "node").  Footprints come from the
+compiled artifact's ``memory_analysis`` — the same numbers the dry-run
+records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.workload import Workload, WorkloadKind
+
+
+class ExecutorClass(str, enum.Enum):
+    CONTAINER = "container"
+    UNIKERNEL = "unikernel"
+
+
+class IncompatibleWorkload(RuntimeError):
+    """Unikernel-class executor asked to run something it wasn't built for."""
+
+
+@dataclasses.dataclass
+class ExecutableImage:
+    """An AOT-compiled, single-purpose program (≙ a unikernel image)."""
+    name: str
+    compiled: Any                      # jax compiled executable
+    arg_spec: Tuple                    # abstract args it was built for
+    build_time_s: float
+    arg_bytes: int
+    temp_bytes: int
+    output_bytes: int
+    donated_argnums: Tuple[int, ...] = ()
+
+    @property
+    def footprint_bytes(self) -> int:
+        # donated args alias outputs; temp is the transient working set
+        return self.arg_bytes + self.temp_bytes
+
+    @classmethod
+    def build(cls, name: str, fn: Callable, args: Tuple,
+              donate_argnums: Tuple[int, ...] = (),
+              in_shardings: Any = None, mesh=None) -> "ExecutableImage":
+        t0 = time.time()
+        kwargs = {}
+        if in_shardings is not None:
+            kwargs["in_shardings"] = in_shardings
+        jitted = jax.jit(fn, donate_argnums=donate_argnums, **kwargs)
+        if mesh is not None:
+            with mesh:
+                lowered = jitted.lower(*args)
+                compiled = lowered.compile()
+        else:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        spec = tuple(jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
+        return cls(name=name, compiled=compiled, arg_spec=spec,
+                   build_time_s=time.time() - t0,
+                   arg_bytes=ma.argument_size_in_bytes,
+                   temp_bytes=ma.temp_size_in_bytes,
+                   output_bytes=ma.output_size_in_bytes,
+                   donated_argnums=donate_argnums)
+
+    def matches(self, args: Tuple) -> bool:
+        try:
+            spec = tuple(jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
+        except Exception:  # noqa: BLE001
+            return False
+        return spec == self.arg_spec
+
+    def __call__(self, *args):
+        return self.compiled(*args)
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    workload: str
+    wall_s: float
+    compiled_fresh: bool
+
+
+class BaseExecutor:
+    executor_class: ExecutorClass
+
+    def __init__(self, name: str, mesh=None):
+        self.name = name
+        self.mesh = mesh
+        self.history: list[DispatchRecord] = []
+        self.inflight = 0
+
+    def footprint_bytes(self) -> int:
+        raise NotImplementedError
+
+    def can_run(self, workload: Workload, args: Tuple) -> bool:
+        raise NotImplementedError
+
+    def dispatch(self, workload: Workload, args: Tuple):
+        raise NotImplementedError
+
+
+class ContainerExecutor(BaseExecutor):
+    """Feature-rich general executor: named entry points, retrace-on-new-shape."""
+
+    executor_class = ExecutorClass.CONTAINER
+
+    def __init__(self, name: str, entry_points: Dict[str, Callable],
+                 state: Optional[Dict[str, Any]] = None, mesh=None):
+        super().__init__(name, mesh)
+        self.entry_points = dict(entry_points)
+        self.state = state or {}          # live params etc.
+        self._jitted: Dict[str, Any] = {
+            k: jax.jit(fn) for k, fn in self.entry_points.items()}
+        self._compiled_shapes: Dict[str, set] = {k: set()
+                                                 for k in self.entry_points}
+        self._state_bytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(self.state))
+
+    def footprint_bytes(self) -> int:
+        return self._state_bytes
+
+    def can_run(self, workload: Workload, args: Tuple) -> bool:
+        return workload.kind.value in self.entry_points or \
+            "generic" in self.entry_points
+
+    def dispatch(self, workload: Workload, args: Tuple):
+        ep = workload.kind.value if workload.kind.value in self.entry_points \
+            else "generic"
+        fn = self._jitted[ep]
+        flat, _ = jax.tree_util.tree_flatten_with_path(args)
+        key = tuple((jax.tree_util.keystr(p), tuple(a.shape), str(a.dtype))
+                    for p, a in flat)
+        fresh = key not in self._compiled_shapes[ep]
+        t0 = time.time()
+        self.inflight += 1
+        try:
+            # entry points close over live state (params); args are payload
+            if self.mesh is not None:
+                with self.mesh:
+                    out = fn(*args)
+            else:
+                out = fn(*args)
+            out = jax.block_until_ready(out)
+        finally:
+            self.inflight -= 1
+        self._compiled_shapes[ep].add(key)
+        self.history.append(DispatchRecord(workload.name, time.time() - t0,
+                                           fresh))
+        return out
+
+
+class UnikernelExecutor(BaseExecutor):
+    """Single-purpose AOT executor: exactly one image, donated buffers."""
+
+    executor_class = ExecutorClass.UNIKERNEL
+
+    def __init__(self, name: str, image: ExecutableImage, mesh=None):
+        super().__init__(name, mesh)
+        self.image = image
+
+    def footprint_bytes(self) -> int:
+        return self.image.footprint_bytes
+
+    def can_run(self, workload: Workload, args: Tuple) -> bool:
+        return self.image.matches(args)
+
+    def dispatch(self, workload: Workload, args: Tuple):
+        if not self.image.matches(args):
+            raise IncompatibleWorkload(
+                f"unikernel {self.name!r} was built for "
+                f"{self.image.arg_spec}; got mismatching args "
+                f"(paper C3: single-purpose by construction)")
+        t0 = time.time()
+        self.inflight += 1
+        try:
+            out = jax.block_until_ready(self.image(*args))
+        finally:
+            self.inflight -= 1
+        self.history.append(DispatchRecord(workload.name, time.time() - t0,
+                                           False))
+        return out

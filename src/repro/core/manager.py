@@ -1,0 +1,113 @@
+"""The configuration manager — the paper's central component (fig 2).
+
+Ties P1–P4 together: classify the workload (application-aware), pick or
+deploy an executor of the right class on a node with headroom
+(resource-aware, via the orchestrator's policy), dispatch, and keep
+per-class telemetry that the benchmarks report (the paper's CPU%/RAM/time
+tables).
+
+Builders: the model/serving layers register how to construct executors for
+a (kind, class) pair; the manager stays application-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.executor import (BaseExecutor, ExecutorClass,
+                                 IncompatibleWorkload)
+from repro.core.orchestrator import Orchestrator, PlacementError
+from repro.core.registry import ImageRegistry
+from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
+                                 classify)
+
+BuilderFn = Callable[[Workload, Any], Tuple[BaseExecutor, int]]
+# (workload, mesh) -> (executor, footprint_bytes)
+
+
+@dataclasses.dataclass
+class DispatchResult:
+    output: Any
+    workload_class: WorkloadClass
+    executor_name: str
+    node_id: str
+    wall_s: float
+    deployed_fresh: bool
+
+
+class ConfigurationManager:
+    def __init__(self, orchestrator: Orchestrator,
+                 registry: Optional[ImageRegistry] = None,
+                 classifier: ClassifierConfig = ClassifierConfig()):
+        self.orchestrator = orchestrator
+        self.registry = registry or ImageRegistry()
+        self.classifier = classifier
+        self.builders: Dict[Tuple[str, WorkloadClass], BuilderFn] = {}
+        self.telemetry: Dict[str, list] = {"heavy": [], "light": []}
+
+    def register_builder(self, kind: str, wclass: WorkloadClass,
+                         builder: BuilderFn):
+        self.builders[(kind, wclass)] = builder
+
+    # ------------------------------------------------------------------
+    def route(self, workload: Workload) -> WorkloadClass:
+        return classify(workload, self.classifier)
+
+    def _find_instance(self, wclass: WorkloadClass, workload: Workload,
+                       args: Tuple):
+        for dep in self.orchestrator.deployments.values():
+            ex = dep.executor
+            if ex.executor_class.value == (
+                    "container" if wclass == WorkloadClass.HEAVY
+                    else "unikernel") and ex.can_run(workload, args):
+                return dep
+        return None
+
+    def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
+        wclass = self.route(workload)
+        t0 = time.time()
+        dep = self._find_instance(wclass, workload, args)
+        fresh = False
+        if dep is None:
+            builder = self.builders.get((workload.kind.value, wclass))
+            if builder is None:
+                raise PlacementError(
+                    f"no builder for kind={workload.kind.value} "
+                    f"class={wclass.value}")
+            def factory(mesh, _b=builder, _w=workload):
+                ex, _ = _b(_w, mesh)
+                return ex
+            # footprint probe: build once on a null mesh-agnostic basis
+            _, footprint = builder(workload, None)
+            name = f"{wclass.value}:{workload.kind.value}:{workload.name}"
+            dep = self.orchestrator.deploy(name, factory, footprint)
+            fresh = True
+        out = dep.executor.dispatch(workload, args)
+        wall = time.time() - t0
+        rec = {"workload": workload.name, "class": wclass.value,
+               "executor": dep.executor.name, "node": dep.node_id,
+               "wall_s": wall, "fresh": fresh,
+               "footprint": dep.executor.footprint_bytes()}
+        self.telemetry["heavy" if wclass == WorkloadClass.HEAVY
+                       else "light"].append(rec)
+        return DispatchResult(out, wclass, dep.executor.name, dep.node_id,
+                              wall, fresh)
+
+    # ------------------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        def summarize(recs):
+            if not recs:
+                return {}
+            return {
+                "count": len(recs),
+                "mean_wall_s": sum(r["wall_s"] for r in recs) / len(recs),
+                "mean_footprint_bytes": sum(r["footprint"] for r in recs)
+                / len(recs),
+            }
+        return {
+            "heavy": summarize(self.telemetry["heavy"]),
+            "light": summarize(self.telemetry["light"]),
+            "registry": self.registry.stats(),
+            "nodes": self.orchestrator.load_report(),
+        }

@@ -1,0 +1,208 @@
+"""Orchestration across nodes (paper P4 — Swarm/KubeEdge/K3s/Nomad layer).
+
+Nodes are mesh slices (on hardware: hosts/pods; in tests: fake-device
+submeshes or logical nodes).  The orchestrator owns
+  * placement (pluggable policies mirroring the paper's orchestrators:
+      round-robin ≙ Swarm's spread, least-loaded ≙ K3s default-ish
+      scheduling, bin-pack ≙ Nomad's binpack),
+  * deployment + elastic scaling of executor instances,
+  * failure handling: a dead node's instances are redeployed onto healthy
+    nodes from their factories (images come from the registry cache — the
+    paper's "containers can be quickly redeployed to alternate devices").
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.executor import BaseExecutor
+from repro.core.resources import NodeCapacity, ResourceMonitor
+from repro.distributed.fault_tolerance import FailureDetector
+
+
+@dataclasses.dataclass
+class Node:
+    node_id: str
+    capacity: NodeCapacity
+    mesh: Any = None
+    healthy: bool = True
+
+
+@dataclasses.dataclass
+class Deployment:
+    name: str
+    node_id: str
+    executor: BaseExecutor
+    footprint: int
+    factory: Callable[[Any], BaseExecutor]     # mesh → executor (redeploy)
+
+
+# --------------------------------------------------------------------------
+# placement policies
+# --------------------------------------------------------------------------
+
+class PlacementPolicy:
+    name = "base"
+
+    def pick(self, nodes: List[Node], monitor: ResourceMonitor,
+             footprint: int) -> Optional[str]:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(PlacementPolicy):
+    """Spread, ignoring load (≙ Docker Swarm)."""
+    name = "round-robin"
+
+    def __init__(self):
+        self._counter = itertools.count()
+
+    def pick(self, nodes, monitor, footprint):
+        live = [n for n in nodes if n.healthy]
+        if not live:
+            return None
+        for _ in range(len(live)):
+            n = live[next(self._counter) % len(live)]
+            if monitor.fits(n.node_id, footprint):
+                return n.node_id
+        return None
+
+
+class LeastLoadedPolicy(PlacementPolicy):
+    """Most free HBM first (≙ K3s-style load spreading)."""
+    name = "least-loaded"
+
+    def pick(self, nodes, monitor, footprint):
+        live = [n for n in nodes if n.healthy
+                and monitor.fits(n.node_id, footprint)]
+        if not live:
+            return None
+        return max(live, key=lambda n: monitor.hbm_free(n.node_id)).node_id
+
+
+class BinPackPolicy(PlacementPolicy):
+    """Tightest fit first — frees whole nodes for scale-down (≙ Nomad)."""
+    name = "bin-pack"
+
+    def pick(self, nodes, monitor, footprint):
+        live = [n for n in nodes if n.healthy
+                and monitor.fits(n.node_id, footprint)]
+        if not live:
+            return None
+        return min(live, key=lambda n: monitor.hbm_free(n.node_id)).node_id
+
+
+POLICIES = {p.name: p for p in (RoundRobinPolicy, LeastLoadedPolicy,
+                                BinPackPolicy)}
+
+
+# --------------------------------------------------------------------------
+
+class PlacementError(RuntimeError):
+    pass
+
+
+class Orchestrator:
+    def __init__(self, policy: Optional[PlacementPolicy] = None,
+                 monitor: Optional[ResourceMonitor] = None,
+                 detector: Optional[FailureDetector] = None):
+        self.policy = policy or LeastLoadedPolicy()
+        self.monitor = monitor or ResourceMonitor()
+        self.nodes: Dict[str, Node] = {}
+        self.deployments: Dict[str, Deployment] = {}
+        self.events: List[str] = []
+        self.detector = detector
+        if detector is not None:
+            detector.on_change(self._on_health_change)
+
+    # ---------------------------------------------------------------- nodes
+    def add_node(self, node_id: str, capacity: NodeCapacity, mesh=None):
+        self.nodes[node_id] = Node(node_id, capacity, mesh)
+        self.monitor.register_node(node_id, capacity)
+        self.events.append(f"node+ {node_id}")
+
+    def _on_health_change(self, host_id: str, healthy: bool):
+        if healthy:
+            self.on_node_rejoin(host_id)
+        else:
+            self.on_node_failure(host_id)
+
+    # ----------------------------------------------------------- deployment
+    def deploy(self, name: str, factory: Callable[[Any], BaseExecutor],
+               footprint: int) -> Deployment:
+        node_id = self.policy.pick(list(self.nodes.values()), self.monitor,
+                                   footprint)
+        if node_id is None:
+            raise PlacementError(
+                f"no healthy node fits {footprint} bytes for {name!r}")
+        if not self.monitor.commit(node_id, name, footprint):
+            raise PlacementError(f"admission race on {node_id} for {name!r}")
+        executor = factory(self.nodes[node_id].mesh)
+        dep = Deployment(name, node_id, executor, footprint, factory)
+        self.deployments[name] = dep
+        self.events.append(f"deploy {name} -> {node_id}")
+        return dep
+
+    def undeploy(self, name: str):
+        dep = self.deployments.pop(name, None)
+        if dep is not None:
+            self.monitor.release(dep.node_id, name)
+            self.events.append(f"undeploy {name}")
+
+    def instances(self, prefix: str = "") -> List[Deployment]:
+        return [d for n, d in self.deployments.items()
+                if n.startswith(prefix)]
+
+    # ------------------------------------------------------------- failures
+    def on_node_failure(self, node_id: str) -> List[str]:
+        """Redeploy everything that lived on the dead node (paper P4)."""
+        node = self.nodes.get(node_id)
+        if node is None:
+            return []
+        node.healthy = False
+        self.monitor.unregister_node(node_id)
+        moved = []
+        for dep in [d for d in self.deployments.values()
+                    if d.node_id == node_id]:
+            self.deployments.pop(dep.name)
+            try:
+                self.deploy(dep.name, dep.factory, dep.footprint)
+                moved.append(dep.name)
+                self.events.append(f"failover {dep.name} {node_id}->"
+                                   f"{self.deployments[dep.name].node_id}")
+            except PlacementError:
+                self.events.append(f"failover-FAILED {dep.name}")
+        return moved
+
+    def on_node_rejoin(self, node_id: str):
+        node = self.nodes.get(node_id)
+        if node is not None and not node.healthy:
+            node.healthy = True
+            self.monitor.register_node(node_id, node.capacity)
+            self.events.append(f"rejoin {node_id}")
+
+    # ------------------------------------------------------------- elastic
+    def scale(self, prefix: str, target: int,
+              factory: Callable[[Any], BaseExecutor], footprint: int
+              ) -> int:
+        """Scale a named instance group up/down (paper: load-driven scaling;
+        scale-down 'conserves energy and reduces operational costs')."""
+        current = sorted(self.instances(prefix), key=lambda d: d.name)
+        n = len(current)
+        if target > n:
+            for i in range(n, target):
+                self.deploy(f"{prefix}{i}", factory, footprint)
+        elif target < n:
+            for dep in current[target:]:
+                self.undeploy(dep.name)
+        return len(self.instances(prefix))
+
+    def autoscale(self, prefix: str, queue_depth: int, per_instance: int,
+                  factory, footprint, min_n: int = 1, max_n: int = 64) -> int:
+        target = max(min_n, min(max_n,
+                                -(-queue_depth // max(per_instance, 1))))
+        return self.scale(prefix, target, factory, footprint)
+
+    # ----------------------------------------------------------------- misc
+    def load_report(self) -> Dict[str, Dict[str, float]]:
+        return self.monitor.snapshot()

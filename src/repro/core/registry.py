@@ -1,0 +1,56 @@
+"""Executable-image registry (≙ the container/unikernel image registry).
+
+Caches AOT-compiled ``ExecutableImage``s keyed by (name, arg shapes/dtypes,
+mesh fingerprint) so redeploys after failures or scale-ups don't pay the
+build again — the unikernel analogue of pulling a prebuilt image instead of
+recompiling the app+libOS.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.executor import ExecutableImage
+
+
+def _mesh_fingerprint(mesh) -> Tuple:
+    if mesh is None:
+        return ()
+    return (tuple(mesh.shape.keys()), tuple(mesh.shape.values()))
+
+
+def _args_fingerprint(args: Tuple) -> Tuple:
+    flat, _ = jax.tree_util.tree_flatten_with_path(args)
+    return tuple((jax.tree_util.keystr(path), tuple(leaf.shape),
+                  str(leaf.dtype)) for path, leaf in flat)
+
+
+class ImageRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._images: Dict[Tuple, ExecutableImage] = {}
+        self.builds = 0
+        self.hits = 0
+
+    def get_or_build(self, name: str, fn: Callable, args: Tuple,
+                     donate_argnums: Tuple[int, ...] = (),
+                     in_shardings: Any = None, mesh=None) -> ExecutableImage:
+        key = (name, _args_fingerprint(args), _mesh_fingerprint(mesh))
+        with self._lock:
+            img = self._images.get(key)
+            if img is not None:
+                self.hits += 1
+                return img
+        img = ExecutableImage.build(name, fn, args,
+                                    donate_argnums=donate_argnums,
+                                    in_shardings=in_shardings, mesh=mesh)
+        with self._lock:
+            self._images[key] = img
+            self.builds += 1
+        return img
+
+    def stats(self) -> Dict[str, int]:
+        return {"builds": self.builds, "hits": self.hits,
+                "images": len(self._images)}

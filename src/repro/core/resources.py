@@ -1,0 +1,95 @@
+"""Resource accounting per node (paper P3: resource-awareness).
+
+The paper's manager watches CPU/RAM per Raspberry Pi; here the scarce
+resources per node (mesh slice) are HBM bytes and sustained FLOP/s.  The
+monitor tracks commitments (deployed executor footprints + in-flight work)
+and answers admission queries.  Real telemetry plugs in through ``observe``;
+tests drive it synthetically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+# v5e chip constants (roofline/analysis.py uses the same numbers)
+HBM_PER_CHIP = 16 * 2 ** 30
+FLOPS_PER_CHIP = 197e12
+
+
+@dataclasses.dataclass
+class NodeCapacity:
+    chips: int = 1
+    hbm_bytes: int = HBM_PER_CHIP
+    flops_per_s: float = FLOPS_PER_CHIP
+
+    @classmethod
+    def for_chips(cls, chips: int) -> "NodeCapacity":
+        return cls(chips=chips, hbm_bytes=chips * HBM_PER_CHIP,
+                   flops_per_s=chips * FLOPS_PER_CHIP)
+
+
+@dataclasses.dataclass
+class Commitment:
+    hbm_bytes: int
+    flops_inflight: float = 0.0
+
+
+class ResourceMonitor:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.capacity: Dict[str, NodeCapacity] = {}
+        self.committed: Dict[str, Dict[str, Commitment]] = {}
+
+    def register_node(self, node_id: str, capacity: NodeCapacity):
+        with self._lock:
+            self.capacity[node_id] = capacity
+            self.committed.setdefault(node_id, {})
+
+    def unregister_node(self, node_id: str):
+        with self._lock:
+            self.capacity.pop(node_id, None)
+            self.committed.pop(node_id, None)
+
+    # ------------------------------------------------------------------
+    def hbm_free(self, node_id: str) -> int:
+        with self._lock:
+            cap = self.capacity[node_id].hbm_bytes
+            used = sum(c.hbm_bytes for c in self.committed[node_id].values())
+            return cap - used
+
+    def hbm_utilization(self, node_id: str) -> float:
+        cap = self.capacity[node_id].hbm_bytes
+        return 1.0 - self.hbm_free(node_id) / cap if cap else 1.0
+
+    def fits(self, node_id: str, hbm_bytes: int) -> bool:
+        return node_id in self.capacity and self.hbm_free(node_id) >= hbm_bytes
+
+    def commit(self, node_id: str, key: str, hbm_bytes: int) -> bool:
+        """Atomic admission: reserve or refuse (paper: avoid overload)."""
+        with self._lock:
+            cap = self.capacity.get(node_id)
+            if cap is None:
+                return False
+            used = sum(c.hbm_bytes for c in self.committed[node_id].values())
+            if used + hbm_bytes > cap.hbm_bytes:
+                return False
+            self.committed[node_id][key] = Commitment(hbm_bytes=hbm_bytes)
+            return True
+
+    def release(self, node_id: str, key: str):
+        with self._lock:
+            if node_id in self.committed:
+                self.committed[node_id].pop(key, None)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {
+                n: {
+                    "hbm_total": float(self.capacity[n].hbm_bytes),
+                    "hbm_used": float(sum(
+                        c.hbm_bytes for c in self.committed[n].values())),
+                    "instances": float(len(self.committed[n])),
+                }
+                for n in self.capacity
+            }

@@ -1,0 +1,104 @@
+"""Work queue + straggler mitigation (speculative backup dispatch).
+
+The paper rebalances overloaded nodes by moving containers; at step/request
+granularity the analogous mechanism is speculative execution: when a
+dispatch exceeds ``threshold × median`` of recent latencies, a backup is
+launched on a different instance and the first completion wins (classic
+MapReduce-style backup tasks, here for serving requests / eval shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class TaskResult:
+    value: Any
+    winner: str              # "primary" | "backup"
+    wall_s: float
+    backup_launched: bool
+
+
+class SpeculativeRunner:
+    """Run fn on primary; if slow, race a backup copy."""
+
+    def __init__(self, threshold: float = 2.0, min_history: int = 5,
+                 window: int = 50):
+        self.threshold = threshold
+        self.min_history = min_history
+        self.window = window
+        self._latencies: List[float] = []
+        self._lock = threading.Lock()
+
+    def _budget(self) -> Optional[float]:
+        with self._lock:
+            hist = self._latencies[-self.window:]
+        if len(hist) < self.min_history:
+            return None
+        return self.threshold * sorted(hist)[len(hist) // 2]
+
+    def _record(self, dt: float):
+        with self._lock:
+            self._latencies.append(dt)
+
+    def run(self, primary: Callable[[], Any],
+            backup: Optional[Callable[[], Any]] = None) -> TaskResult:
+        budget = self._budget()
+        t0 = time.time()
+        if backup is None or budget is None:
+            out = primary()
+            dt = time.time() - t0
+            self._record(dt)
+            return TaskResult(out, "primary", dt, False)
+
+        result_q: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+
+        def wrap(tag, fn):
+            def go():
+                try:
+                    result_q.put((tag, fn()))
+                except Exception as e:  # noqa: BLE001
+                    result_q.put((tag + ":error", e))
+            return go
+
+        t_primary = threading.Thread(target=wrap("primary", primary),
+                                     daemon=True)
+        t_primary.start()
+        backup_launched = False
+        try:
+            tag, val = result_q.get(timeout=budget)
+        except queue.Empty:
+            backup_launched = True
+            threading.Thread(target=wrap("backup", backup),
+                             daemon=True).start()
+            tag, val = result_q.get()
+        if tag.endswith(":error"):
+            raise val
+        dt = time.time() - t0
+        self._record(dt)
+        return TaskResult(val, tag, dt, backup_launched)
+
+
+class WorkQueue:
+    """Bounded FIFO with depth telemetry — feeds the autoscaler."""
+
+    def __init__(self, maxsize: int = 0):
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=maxsize)
+        self.enqueued = 0
+        self.dequeued = 0
+
+    def put(self, item: Any):
+        self._q.put(item)
+        self.enqueued += 1
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        item = self._q.get(timeout=timeout)
+        self.dequeued += 1
+        return item
+
+    def depth(self) -> int:
+        return self._q.qsize()

@@ -1,0 +1,57 @@
+"""Hierarchical collectives for the multi-pod mesh.
+
+The 2×16×16 mesh's `pod` axis is the slow link (data-center network /
+inter-slice ICI vs in-pod ICI).  `cross_pod_psum_int8` reduces a value over
+the pod axis with an int8 payload: quantize per-block → all_gather(int8 +
+scales) over `pod` → dequantize-and-sum locally.  For S pods the wire cost
+is (S−1)/S · (bytes/4 + scales) vs 2(S−1)/S · bytes for a ring all-reduce —
+an ~8× reduction at S=2.  Combined with `optim.grad.compress_decompress`'s
+error feedback, the quantization noise is unbiased over steps.
+
+Use inside `jax.shard_map` bodies (the gradient-reduction hook for custom
+training loops); semantics are proven in tests/test_distributed_small.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_block(x: jax.Array, block: int = 256):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_block(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def cross_pod_psum_int8(x: jax.Array, axis_name: str = "pod",
+                        block: int = 256) -> jax.Array:
+    """psum over the slow axis with an int8+scales payload."""
+    q, scale = quantize_block(x, block)
+    q_all = jax.lax.all_gather(q, axis_name)          # [S, blocks, block]
+    s_all = jax.lax.all_gather(scale, axis_name)
+    deq = q_all.astype(jnp.float32) * s_all           # [S, blocks, block]
+    total = jnp.sum(deq, axis=0).reshape(-1)
+    n = x.size
+    return total[:n].reshape(x.shape).astype(x.dtype)
+
+
+def hierarchical_psum(x: jax.Array, *, fast_axes=("data",),
+                      pod_axis: str = "pod", int8_cross_pod: bool = True,
+                      block: int = 256) -> jax.Array:
+    """Reduce within the pod at full precision, across pods compressed."""
+    y = jax.lax.psum(x, fast_axes)
+    if int8_cross_pod:
+        return cross_pod_psum_int8(y, pod_axis, block)
+    return jax.lax.psum(y, pod_axis)

@@ -1,0 +1,260 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Model code annotates activations with *logical* axis names via ``shard(x,
+"batch", "seq", "embed")``; parameter trees get logical dims from a
+name-keyed rule table.  A ``ShardingRules`` context resolves logical names to
+mesh axes — so the same model code runs on the single-pod ``("data","model")``
+mesh, the multi-pod ``("pod","data","model")`` mesh, or a 1-device test mesh.
+
+Resolution is divisibility-safe: a logical dim only maps to a mesh axis if the
+dim size divides evenly (e.g. 8 KV heads on a 16-way model axis fall back to
+replication instead of producing a padded, wasteful sharding).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# default logical-axis → mesh-axis tables -----------------------------------
+
+def single_pod_rules() -> Dict[str, MeshAxes]:
+    return {
+        "batch": ("data",),
+        "cache_batch": ("data",),  # KV-cache batch dim (may differ from act)
+        "seq": None,
+        "embed": None,
+        "fsdp": "data",          # ZeRO-3 param/optimizer sharding
+        "heads": "model",
+        "kv_heads": "model",
+        "kv_seq": "model",       # context-parallel KV cache fallback
+        "ffn": "model",
+        "inner": "model",        # mamba d_inner
+        "experts": "model",      # expert parallelism
+        "vocab": "model",
+        "act_seq": None,         # sequence parallelism (off by default)
+    }
+
+
+def multi_pod_rules() -> Dict[str, MeshAxes]:
+    r = single_pod_rules()
+    r["batch"] = ("pod", "data")
+    r["cache_batch"] = ("pod", "data")
+    return r
+
+
+def seqpar_rules(multi_pod: bool = False) -> Dict[str, MeshAxes]:
+    """Megatron-style sequence parallelism: residual-stream activations are
+    sharded over `model` along the sequence between attention/FFN regions
+    (GSPMD inserts the all-gather/reduce-scatter pairs).  Cuts the saved
+    residual stack and norm/elementwise HBM traffic by the model-axis size."""
+    r = multi_pod_rules() if multi_pod else single_pod_rules()
+    r["act_seq"] = "model"
+    return r
+
+
+def serve2d_rules(multi_pod: bool = False) -> Dict[str, MeshAxes]:
+    """Decode-optimized 2-D tensor parallelism (no per-step weight movement).
+
+    Weights stay sharded over BOTH axes (row=data on the contraction dim ×
+    col=model on heads/ffn); activations replicate over batch and alternate
+    [.., d→data] / [.., f→model], so each matmul ends in a small-activation
+    psum instead of an all-gather of the (huge) weights.  The KV cache keeps
+    its batch→data sharding via the dedicated `cache_batch` axis."""
+    r = multi_pod_rules() if multi_pod else single_pod_rules()
+    r["batch"] = None
+    r["embed"] = "data" if not multi_pod else ("pod", "data")
+    r["cache_batch"] = ("data",) if not multi_pod else ("pod", "data")
+    return r
+
+
+RULE_TABLES = {
+    "default": lambda multi: multi_pod_rules() if multi else single_pod_rules(),
+    "seqpar": seqpar_rules,
+    "serve2d": serve2d_rules,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Optional[Mesh], rules: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def mesh_axis_size(self, axes: MeshAxes) -> int:
+        if axes is None or self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def resolve(self, logical_dims: Sequence[Optional[str]],
+                shape: Optional[Sequence[int]] = None) -> P:
+        out = []
+        used = set()
+        for i, name in enumerate(logical_dims):
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                out.append(None)
+                continue
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            ax_tuple = tuple(a for a in ax_tuple if a not in used
+                             and a in self.mesh.shape) if self.mesh else ()
+            if not ax_tuple:
+                out.append(None)
+                continue
+            if shape is not None:
+                size = self.mesh_axis_size(ax_tuple)
+                if shape[i] % size != 0:
+                    out.append(None)
+                    continue
+            used.update(ax_tuple)
+            out.append(ax_tuple[0] if len(ax_tuple) == 1 else ax_tuple)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+    if rules is None:
+        rules = (multi_pod_rules() if mesh is not None and "pod" in mesh.shape
+                 else single_pod_rules())
+    prev = current_rules()
+    _local.rules = ShardingRules(mesh, rules) if mesh is not None else None
+    try:
+        yield _local.rules
+    finally:
+        _local.rules = prev
+
+
+def shard(x: jax.Array, *logical_dims: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding; no-op outside a rules context."""
+    ctx = current_rules()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = ctx.resolve(logical_dims, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter logical dims (keyed on leaf path names)
+# ---------------------------------------------------------------------------
+
+# leaf name → logical dims for the *unstacked* (single-layer) param. Stacked
+# (scanned) params get a leading `None` (layer) dim added automatically.
+_PARAM_DIMS: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embedding": ("vocab", "fsdp"),
+    "w_head": ("fsdp", "vocab"),
+    "w_frontend": (None, "fsdp"),
+    # attention
+    "w_q": ("fsdp", "heads", None),
+    "w_k": ("fsdp", "kv_heads", None),
+    "w_v": ("fsdp", "kv_heads", None),
+    "w_o": ("heads", None, "fsdp"),
+    "b_q": ("heads", None), "b_k": ("kv_heads", None),
+    "b_v": ("kv_heads", None), "b_o": (None,),
+    "q_norm": (None,), "k_norm": (None,), "kv_norm": (None,),
+    # MLA
+    "w_dq": ("fsdp", None), "w_uq": (None, "heads", None),
+    "w_dkv": ("fsdp", None), "w_kr": ("fsdp", None),
+    "w_uk": (None, "heads", None), "w_uv": (None, "heads", None),
+    # mlp
+    "w_gate": ("fsdp", "ffn"), "w_up": ("fsdp", "ffn"), "w_down": ("ffn", "fsdp"),
+    "b_up": ("ffn",), "b_down": (None,),
+    # moe (expert-stacked weights shadow mlp names via path check below)
+    "router": (None, None),
+    # mamba2
+    "in_proj": ("fsdp", "inner"), "out_proj": ("inner", "fsdp"),
+    "conv_w": ("inner", None), "conv_b": ("inner",),
+    "dt_bias": (None,), "a_log": (None,), "d_skip": (None,), "out_norm": (None,),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+# expert weights: experts→model (EP) when divisible; the resolver's
+# divisibility fallback otherwise leaves experts unsharded and the "ffn"
+# entry then takes the model axis (per-expert tensor parallelism).
+_MOE_DIMS: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("experts", "fsdp", "ffn"),
+    "w_up": ("experts", "fsdp", "ffn"),
+    "w_down": ("experts", "ffn", "fsdp"),
+}
+
+
+def _leaf_dims(path, leaf) -> Tuple[Optional[str], ...]:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    leaf_name = names[-1]
+    in_moe = any(n == "moe" for n in names[:-1])
+    in_shared = any(n == "shared" for n in names)
+    table = _MOE_DIMS if (in_moe and not in_shared
+                          and leaf_name in _MOE_DIMS) else _PARAM_DIMS
+    dims = table.get(leaf_name, ())
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if len(dims) < ndim:
+        # stacked (scanned) leading layer dims → unsharded
+        dims = (None,) * (ndim - len(dims)) + tuple(dims)
+    elif len(dims) > ndim:
+        dims = tuple(dims[-ndim:]) if ndim else ()
+    return tuple(dims)
+
+
+def param_logical_dims(params):
+    return jax.tree_util.tree_map_with_path(_leaf_dims, params)
+
+
+def param_partition_specs(params, rules: ShardingRules):
+    def spec(path, leaf):
+        return rules.resolve(_leaf_dims(path, leaf), leaf.shape)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, rules: ShardingRules):
+    specs = param_partition_specs(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# cache logical dims ---------------------------------------------------------
+
+def cache_partition_specs(cache, rules: ShardingRules):
+    """KV caches: batch→data; kv_heads→model when divisible, else seq→model."""
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        if name in ("k", "v"):
+            # [(layers,)? B, S, H, D]
+            lead = (None,) * (len(shape) - 4)
+            h = shape[-2]
+            if h % max(rules.mesh_axis_size(rules.rules.get("kv_heads")), 1) == 0:
+                return rules.resolve(
+                    lead + ("cache_batch", None, "kv_heads", None), shape)
+            return rules.resolve(
+                lead + ("cache_batch", "kv_seq", None, None), shape)
+        if name in ("c_kv", "k_rope"):
+            lead = (None,) * (len(shape) - 3)
+            return rules.resolve(lead + ("cache_batch", "kv_seq", None), shape)
+        if name == "conv":
+            lead = (None,) * (len(shape) - 3)
+            return rules.resolve(lead + ("cache_batch", None, "inner"), shape)
+        if name == "ssm":
+            lead = (None,) * (len(shape) - 4)
+            return rules.resolve(
+                lead + ("cache_batch", "heads", None, None), shape)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,179 @@
+"""Flash-semantics blocked attention for the XLA path (jnp, custom_vjp).
+
+Same online-softmax algorithm as the Pallas kernel, expressed in jnp with a
+hand-written backward — so the saved residuals are O(T) (q, k, v, out, lse)
+instead of the O(T²) probability matrix a naive implementation makes the AD
+system keep.  This is what makes the 32k-prefill / 4k-train cells fit, and
+it is the exact reference semantics of the TPU kernel's (future) bwd pass.
+
+KV blocks are a static python loop (8–64 blocks): block count is small, and
+unrolling keeps every block's FLOPs visible to the dry-run's cost analysis
+(a lax.scan body would be counted once).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _prep(q, k, v, q_positions, kv_positions, kv_valid_len):
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Tq, dtype=jnp.int32)[None],
+                                       (B, Tq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Tk, dtype=jnp.int32)[None],
+                                        (B, Tk))
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((B,), Tk, jnp.int32)
+    return q_positions, kv_positions, kv_valid_len
+
+
+def _mask(qp, kp, valid, causal, window):
+    # qp: [B, Tq], kp: [B, bk], valid: [B]
+    m = kp[:, None, :] < valid[:, None, None]
+    if causal:
+        m &= kp[:, None, :] <= qp[:, :, None]
+    if window > 0:
+        m &= qp[:, :, None] - kp[:, None, :] < window
+    return m[:, None, None]        # [B, 1, 1, Tq, bk]
+
+
+def _logits(q5, kb, softcap):
+    # q5: [B, Hkv, G, Tq, D] f32(scaled); kb: [B, Hkv, bk, D]
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q5, kb.astype(jnp.float32))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _blocked(q, k, v, causal, window, softcap, block_k,
+             q_positions=None, kv_positions=None, kv_valid_len=None,
+             sm_scale=None):
+    out, _ = _blocked_fwd(q, k, v, causal, window, softcap, block_k,
+                          q_positions, kv_positions, kv_valid_len, sm_scale)
+    return out
+
+
+def _blocked_fwd(q, k, v, causal, window, softcap, block_k,
+                 q_positions, kv_positions, kv_valid_len, sm_scale):
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    qp, kp, valid = _prep(q, k, v, q_positions, kv_positions, kv_valid_len)
+
+    q5 = (q.astype(jnp.float32) * scale).reshape(
+        B, Tq, Hkv, G, D).transpose(0, 2, 3, 1, 4)           # [B,Hkv,G,Tq,D]
+    m = jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    acc = jnp.zeros((B, Hkv, G, Tq, Dv), jnp.float32)
+
+    bk = min(block_k, Tk)
+    for j0 in range(0, Tk, bk):
+        kb = jax.lax.dynamic_slice_in_dim(k, j0, min(bk, Tk - j0), axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j0, min(bk, Tk - j0), axis=1)
+        kpb = jax.lax.dynamic_slice_in_dim(kp, j0, min(bk, Tk - j0), axis=1)
+        kb = kb.transpose(0, 2, 1, 3)                        # [B,Hkv,bk,D]
+        vb = vb.transpose(0, 2, 1, 3)
+        s = _logits(q5, kb, softcap)                         # [B,Hkv,G,Tq,bk]
+        msk = _mask(qp, kpb, valid, causal, window)
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        m = m_new
+
+    lsafe = jnp.where(l == 0.0, 1.0, l)
+    out = jnp.where((l == 0.0)[..., None], 0.0, acc / lsafe[..., None])
+    lse = m + jnp.log(lsafe)
+    out_t = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, Dv).astype(q.dtype)
+    res = (q, k, v, out_t, lse, qp, kp, valid,
+           None if sm_scale is None else sm_scale)
+    return out_t, res
+
+
+def _blocked_bwd(causal, window, softcap, block_k, res, g):
+    q, k, v, out, lse, qp, kp, valid, sm_scale = res
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    gf = g.astype(jnp.float32).reshape(B, Tq, Hkv, G, Dv).transpose(
+        0, 2, 3, 1, 4)                                       # [B,Hkv,G,Tq,Dv]
+    of = out.astype(jnp.float32).reshape(B, Tq, Hkv, G, Dv).transpose(
+        0, 2, 3, 1, 4)
+    q5s = (q.astype(jnp.float32) * scale).reshape(
+        B, Tq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    Dsum = jnp.sum(gf * of, axis=-1)                         # [B,Hkv,G,Tq]
+
+    dq = jnp.zeros_like(q5s)
+    dk = jnp.zeros((B, Hkv, Tk, D), jnp.float32)
+    dv = jnp.zeros((B, Hkv, Tk, Dv), jnp.float32)
+
+    bk = min(block_k, Tk)
+    for j0 in range(0, Tk, bk):
+        width = min(bk, Tk - j0)
+        kb = jax.lax.dynamic_slice_in_dim(k, j0, width, axis=1) \
+            .transpose(0, 2, 1, 3)                           # [B,Hkv,bk,D]
+        vb = jax.lax.dynamic_slice_in_dim(v, j0, width, axis=1) \
+            .transpose(0, 2, 1, 3)
+        kpb = jax.lax.dynamic_slice_in_dim(kp, j0, width, axis=1)
+
+        s_raw = jnp.einsum("bhgqd,bhkd->bhgqk", q5s,
+                           kb.astype(jnp.float32))
+        if softcap > 0.0:
+            t = jnp.tanh(s_raw / softcap)
+            s = t * softcap
+            dcap = 1.0 - jnp.square(t)
+        else:
+            s = s_raw
+            dcap = None
+        msk = _mask(qp, kpb, valid, causal, window)
+        s = jnp.where(msk, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(msk, p, 0.0)                           # [B,Hkv,G,Tq,bk]
+
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", gf, vb.astype(jnp.float32))
+        ds = p * (dp - Dsum[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq += jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb.astype(jnp.float32))
+        dk_b = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q5s)      # note: scaled q
+        dv_b = jnp.einsum("bhgqk,bhgqd->bhkd", p, gf)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, dk_b, j0, axis=2)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, dv_b, j0, axis=2)
+
+    dq = (dq * scale).transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D)
+    dk = dk.transpose(0, 2, 1, 3)                            # [B,Tk,Hkv,D]
+    dv = dv.transpose(0, 2, 1, 3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None, None, None)
+
+
+_blocked.defvjp(_blocked_fwd, _blocked_bwd)
+
+
+def mha_blocked(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+    sm_scale: Optional[float] = None, block_k: int = 1024,
+):
+    return _blocked(q, k, v, causal, window, softcap, block_k,
+                    q_positions, kv_positions, kv_valid_len, sm_scale)

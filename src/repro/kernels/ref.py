@@ -1,0 +1,228 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the kernels are tested against (interpret mode on
+CPU), and the fallback implementation used when running on a non-TPU backend
+(including the dry-run, where XLA-visible einsum FLOPs are what
+``cost_analysis`` counts).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# multi-head attention (flash-attention semantics)
+# ---------------------------------------------------------------------------
+
+def mha(
+    q: jax.Array,                  # [B, Tq, Hq, D]
+    k: jax.Array,                  # [B, Tk, Hkv, D]
+    v: jax.Array,                  # [B, Tk, Hkv, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,               # >0 → sliding window width
+    softcap: float = 0.0,
+    q_positions: Optional[jax.Array] = None,   # [B, Tq] absolute positions
+    kv_positions: Optional[jax.Array] = None,  # [B, Tk]
+    kv_valid_len: Optional[jax.Array] = None,  # [B] valid cache length
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Tq)[None], (B, Tq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Tk)[None], (B, Tk))
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # [B, Hkv, G, Tq, D] x [B, Hkv, Tk, D] -> [B, Hkv, G, Tq, Tk]
+    qf = qf.reshape(B, Tq, Hkv, groups, D).transpose(0, 2, 3, 1, 4)
+    kf = kf.transpose(0, 2, 1, 3)
+    vf = vf.transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = jnp.ones_like(logits, dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= qp - kp < window
+    if kv_valid_len is not None:
+        mask &= kp < kv_valid_len[:, None, None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that mask everything produce uniform probs over NEG_INF; zero them
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, vf.shape[-1])
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                  # [B, Hq, D] one query token per sequence
+    k_cache: jax.Array,            # [B, S, Hkv, D]
+    v_cache: jax.Array,            # [B, S, Hkv, Dv]
+    cache_len: jax.Array,          # [B] number of valid slots (incl. new token)
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    groups = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, groups, D)
+    kf = k_cache.astype(jnp.float32).transpose(0, 2, 1, 3)   # [B, Hkv, S, D]
+    vf = v_cache.astype(jnp.float32).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, kf)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < cache_len[:, None, None, None]
+    if window > 0:
+        mask &= pos >= (cache_len[:, None, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
+    return out.reshape(B, Hq, vf.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan(
+    x: jax.Array,        # [B, T, H, P]   inputs (already gated/convolved)
+    dt: jax.Array,       # [B, T, H]      softplus'd timestep, >0
+    A: jax.Array,        # [H]            negative scalars
+    B_: jax.Array,       # [B, T, G, N]   input matrix (groups G)
+    C: jax.Array,        # [B, T, G, N]   output matrix
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,   # [B, H, P, N]
+    return_final_state: bool = False,
+):
+    """Chunked state-space-dual computation of y_t = C_t^T h_t,
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t^T   (per head).
+
+    Reference implementation: einsum-based, scan over chunks.
+    """
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    T0 = T
+    if T % chunk != 0:
+        # pad tail with dt=0 steps: decay=exp(0)=1 and update=0 → state-neutral
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nC = T // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)   # [B, T, H, N]
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+
+    # reshape to chunks
+    xc = xf.reshape(Bb, nC, chunk, H, P)
+    dtc = dtf.reshape(Bb, nC, chunk, H)
+    Bc = Bf.reshape(Bb, nC, chunk, H, N)
+    Cc = Cf.reshape(Bb, nC, chunk, H, N)
+
+    da = dtc * Af[None, None, None, :]                 # log decay per step ≤ 0
+    cum = jnp.cumsum(da, axis=2)                       # within-chunk cumulative
+    # intra-chunk causal decay matrix L[i,j] = exp(cum_i - cum_j) for j<=i
+    li = cum[:, :, :, None, :]                         # [B,nC,i,1,H]
+    lj = cum[:, :, None, :, :]                         # [B,nC,1,j,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(li - lj), 0.0)         # [B,nC,i,j,H]
+
+    dx = xc * dtc[..., None]                           # dt_j B_j x_j weighting
+    # intra-chunk: y_i = sum_j (C_i·B_j) L_ij dx_j
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * L, dx)
+
+    # chunk-local final states: S_c = sum_j exp(cum_end - cum_j) B_j dx_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # [B,nC,chunk,H]
+    S_local = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", decay_to_end, Bc, dx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # [B,nC,H] total chunk decay
+
+    # scan chunk states: S_c_in = chunk_decay_c * S_{c-1}_in + S_{c-1}_local
+    def step(carry, inp):
+        s_prev = carry                                  # [B,H,N,P] state entering chunk
+        s_local, dec = inp
+        s_out = s_prev                                  # state entering this chunk
+        s_next = dec[:, :, None, None] * s_prev + s_local
+        return s_next, s_out
+
+    if initial_state is None:
+        s0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    else:
+        s0 = jnp.swapaxes(initial_state.astype(jnp.float32), -1, -2)  # [B,H,N,P]
+    s_final, s_in = jax.lax.scan(
+        step,
+        s0,
+        (S_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_in = s_in.transpose(1, 0, 2, 3, 4)               # [B,nC,H,N,P]
+
+    # inter-chunk: y_i += exp(cum_i) C_i · S_in
+    decay_from_start = jnp.exp(cum)                    # [B,nC,chunk,H]
+    y_inter = jnp.einsum("bcih,bcihn,bchnp->bcihp", decay_from_start, Cc, s_in)
+
+    y = (y_intra + y_inter).reshape(Bb, T, H, P)[:, :T0].astype(x.dtype)
+    if return_final_state:
+        return y, jnp.swapaxes(s_final, -1, -2)        # [B,H,P,N]
+    return y
+
+
+def ssd_decode_step(
+    x: jax.Array,        # [B, H, P]
+    dt: jax.Array,       # [B, H]
+    A: jax.Array,        # [H]
+    B_: jax.Array,       # [B, G, N]
+    C: jax.Array,        # [B, G, N]
+    state: jax.Array,    # [B, H, P, N]
+):
+    """Single recurrent step (decode): returns (y [B,H,P], new_state)."""
+    H = x.shape[1]
+    G = B_.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=1)   # [B,H,N]
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])  # [B,H]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf, x.astype(jnp.float32), Bf)
+    new_state = decay[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cf)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(dtype)

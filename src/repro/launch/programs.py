@@ -1,0 +1,265 @@
+"""Program builders: (arch × shape × mesh) → lowered/compiled XLA programs.
+
+This is the single place where step functions, input ShapeDtypeStructs and
+shardings are assembled — the dry-run, the executors (core.executor) and the
+drivers (train.py / serve.py) all build programs here, so "what we dry-run"
+is exactly "what we deploy".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+from repro.launch.shapes import SHAPES, ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.model import Model, build_model
+from repro.optim import adamw, grad as gradlib, schedule
+from repro.models import transformer
+
+
+# ---------------------------------------------------------------------------
+# training configuration bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+    sched: schedule.ScheduleConfig = schedule.ScheduleConfig()
+    num_microbatches: int = 1
+    compress_grads: bool = False      # int8 error-feedback gradient payload
+
+
+def default_train_config(cfg: ModelConfig) -> TrainConfig:
+    """8-bit optimizer state for the ≥30B archs (HBM budget, DESIGN §5)."""
+    big = cfg.num_params() > 30e9
+    return TrainConfig(
+        adamw=adamw.AdamWConfig(state_dtype="int8" if big else "float32"))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocate)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        return {
+            "features": jax.ShapeDtypeStruct((B, T, cfg.frontend_dim),
+                                             jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, T), jnp.bool_),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        return {"features": jax.ShapeDtypeStruct((B, T, cfg.frontend_dim),
+                                                 jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: transformer.init_cache_tree(cfg, batch, max_seq, dtype))
+
+
+def decode_arg_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "caches": cache_specs(cfg, B, S),
+        "cache_len": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def param_specs_abstract(cfg: ModelConfig):
+    return build_model(cfg).init_abstract()
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """All (non-param) inputs of the step the shape lowers, as specs."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape),
+                "caches": cache_specs(cfg, shape.global_batch, shape.seq_len)}
+    return decode_arg_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = gradlib.accumulate_grads(
+            model.loss, params, batch, tcfg.num_microbatches)
+        if tcfg.compress_grads:
+            grads, _ = gradlib.compress_decompress(grads)
+        lr_scale = schedule.lr_multiplier(opt_state["step"], tcfg.sched)
+        params, opt_state, om = adamw.apply_updates(
+            params, grads, opt_state, tcfg.adamw, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    model = build_model(cfg)
+
+    def decode_step(params, tokens, caches, cache_len):
+        logits, caches = model.decode(params, tokens, caches, cache_len)
+        return logits, caches, cache_len + 1
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _named(rules: shlib.ShardingRules, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_shardings(batch_specs, rules: shlib.ShardingRules):
+    def spec(path, leaf):
+        dims = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return rules.resolve(dims, leaf.shape)
+    return _named(rules, jax.tree_util.tree_map_with_path(spec, batch_specs))
+
+
+def opt_state_shardings(abstract_state, param_spec_tree,
+                        rules: shlib.ShardingRules, acfg: adamw.AdamWConfig):
+    if acfg.state_dtype == "int8":
+        # blocked int8 moments: shard the block axis over EVERY available
+        # mesh axis (ZeRO over data×model×pod) — the update is elementwise
+        # in block space, so any regular partition works
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if rules.mesh is not None and a in rules.mesh.shape)
+        size = rules.mesh_axis_size(axes) if axes else 1
+
+        def qspec(leaf):
+            n = leaf.shape[0]
+            if axes and n % size == 0:
+                return P(axes)
+            if axes and n % rules.mesh.shape[axes[-1]] == 0:
+                return P(axes[-1])
+            return P(None)
+        mspec = jax.tree.map(qspec, abstract_state["m"])
+        vspec = jax.tree.map(qspec, abstract_state["v"])
+    else:
+        mspec, vspec = param_spec_tree, param_spec_tree
+    return _named(rules, {"step": P(), "m": mspec, "v": vspec})
+
+
+def program_shardings(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                      tcfg: Optional[TrainConfig] = None,
+                      rules_name: str = "default"):
+    """Returns (in_shardings, out_shardings, arg_specs, step_fn, donate)."""
+    shape = SHAPES[shape_name]
+    rules = shlib.ShardingRules(
+        mesh, shlib.RULE_TABLES[rules_name]("pod" in mesh.shape))
+
+    abstract_params = param_specs_abstract(cfg)
+    pspecs = shlib.param_partition_specs(abstract_params, rules)
+    psh = _named(rules, pspecs)
+
+    if shape.kind == "train":
+        tcfg = tcfg or default_train_config(cfg)
+        abstract_opt = jax.eval_shape(
+            functools.partial(adamw.init_state, cfg=tcfg.adamw),
+            abstract_params)
+        osh = opt_state_shardings(abstract_opt, pspecs, rules, tcfg.adamw)
+        bspecs = train_batch_specs(cfg, shape)
+        bsh = batch_shardings(bspecs, rules)
+        metric_sh = NamedSharding(mesh, P())
+        fn = build_train_step(cfg, tcfg)
+        in_sh = (psh, osh, bsh)
+        out_sh = (psh, osh, None)  # metrics inferred (scalars)
+        args = (abstract_params, abstract_opt, bspecs)
+        return in_sh, out_sh, args, fn, (0, 1)
+
+    if shape.kind == "prefill":
+        bspecs = prefill_batch_specs(cfg, shape)
+        bsh = batch_shardings(bspecs, rules)
+        cspecs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        csh = _named(rules, shlib.cache_partition_specs(cspecs, rules))
+        logit_sh = NamedSharding(
+            mesh, rules.resolve(("batch", "vocab"),
+                                (shape.global_batch, cfg.vocab_size)))
+        len_sh = NamedSharding(
+            mesh, rules.resolve(("batch",), (shape.global_batch,)))
+        fn = build_prefill_step(cfg)
+        return ((psh, bsh, csh), (logit_sh, csh, len_sh),
+                (abstract_params, bspecs, cspecs), fn, (2,))
+
+    # decode
+    aspecs = decode_arg_specs(cfg, shape)
+    csh = _named(rules, shlib.cache_partition_specs(aspecs["caches"], rules))
+    tok_sh = NamedSharding(mesh, rules.resolve(("batch",),
+                                               (shape.global_batch,)))
+    logit_sh = NamedSharding(
+        mesh, rules.resolve(("batch", "vocab"),
+                            (shape.global_batch, cfg.vocab_size)))
+    fn = build_decode_step(cfg)
+    return ((psh, tok_sh, csh, tok_sh), (logit_sh, csh, tok_sh),
+            (abstract_params, aspecs["tokens"], aspecs["caches"],
+             aspecs["cache_len"]), fn, (2,))
+
+
+def lower_program(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                  tcfg: Optional[TrainConfig] = None,
+                  rules_name: str = "default",
+                  attn_impl: Optional[str] = None):
+    """Lower (no compile) the step for this cell under the mesh's rules.
+
+    ``rules_name``: sharding-rule table ("default" | "seqpar" | "serve2d").
+    ``attn_impl``: kernels.ops implementation pin for the traced program
+    ("ref" = naive baseline, "blocked" = flash-semantics XLA path).
+    """
+    from repro.kernels import ops as kops
+
+    in_sh, out_sh, args, fn, donate = program_shardings(
+        cfg, shape_name, mesh, tcfg, rules_name=rules_name)
+    rules_table = shlib.RULE_TABLES[rules_name]("pod" in mesh.shape)
+    prev_impl = kops._IMPL_OVERRIDE
+    if attn_impl is not None:
+        kops.set_impl(attn_impl)
+    try:
+        with shlib.use_rules(mesh, rules_table):
+            with mesh:
+                jitted = jax.jit(fn, in_shardings=in_sh,
+                                 donate_argnums=donate)
+                lowered = jitted.lower(*args)
+    finally:
+        kops.set_impl(prev_impl)
+    return lowered

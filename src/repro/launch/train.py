@@ -1,0 +1,75 @@
+"""Training driver.
+
+Single-host CPU (reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 50
+
+On a TPU pod each host runs this same entry point (jax.distributed
+initializes from the TPU runtime env); the mesh comes from
+``make_production_mesh`` and per-host data sharding from host_index.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--mesh", default="test",
+                    choices=["test", "single", "multi"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (TPU pods)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from repro.configs import get_config, get_reduced_config
+    from repro.data.tokens import make_encoder_iterator, make_lm_iterator
+    from repro.launch import programs
+    from repro.launch.mesh import make_production_mesh, make_test_mesh
+    from repro.train.trainer import Trainer, TrainerConfig
+    import dataclasses
+
+    cfg = get_reduced_config(args.arch) if args.reduced \
+        else get_config(args.arch)
+    mesh = (make_test_mesh() if args.mesh == "test"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    tcfg = dataclasses.replace(programs.default_train_config(cfg),
+                               num_microbatches=args.microbatch)
+    trainer = Trainer(cfg, mesh, tcfg,
+                      TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25))
+    trainer.initialize(restore=True)
+
+    host = jax.process_index() if jax.process_count() > 1 else 0
+    if cfg.encoder_only:
+        data = make_encoder_iterator(cfg, args.batch, args.seq)
+    else:
+        data = make_lm_iterator(cfg, args.batch, args.seq, host_index=host,
+                                host_count=max(jax.process_count(), 1))
+    for _ in range(trainer.step):
+        next(data)                       # deterministic replay after restart
+
+    def log(step, m):
+        print(f"step {step:5d} loss={m['loss']:.4f} "
+              f"{m['step_time_s'] * 1e3:.0f}ms"
+              + (" [straggler]" if m.get("straggler") else ""), flush=True)
+
+    hist = trainer.fit(data, num_steps=args.steps, log_fn=log)
+    print(f"final loss {hist['loss'][-1]:.4f}; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

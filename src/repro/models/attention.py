@@ -1,0 +1,284 @@
+"""Attention variants: MHA / GQA / MQA, sliding-window, and DeepSeek MLA.
+
+All flavours share one interface:
+
+    params, cache0       = init_attention(key, cfg), init_cache(cfg, B, S)
+    out                  = attend(params, x, cfg, positions=...)              # train
+    out, cache           = attend(params, x, cfg, positions=..., cache=...)  # prefill
+    out, cache           = decode_step(params, x1, cfg, cache, cache_len)    # decode
+
+Caches are plain dicts of arrays so they shard/donate cleanly.  Sliding-window
+archs get a *ring-buffer* cache bounded by the window (this is what makes
+``long_500k`` decoding O(window) memory for mixtral).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm_simple
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim_
+    dt = cfg.pdtype
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        ks = jax.random.split(key, 7)
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dt),
+            "q_norm": jnp.ones((m.q_lora_rank,), dt),
+            "w_uq": dense_init(ks[1], (m.q_lora_rank, cfg.num_heads, qk_dim), dt,
+                               fan_in=m.q_lora_rank),
+            "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dt),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+            "w_kr": dense_init(ks[3], (d, m.qk_rope_head_dim), dt),
+            "w_uk": dense_init(ks[4], (m.kv_lora_rank, cfg.num_heads,
+                                       m.qk_nope_head_dim), dt,
+                               fan_in=m.kv_lora_rank),
+            "w_uv": dense_init(ks[5], (m.kv_lora_rank, cfg.num_heads,
+                                       m.v_head_dim), dt, fan_in=m.kv_lora_rank),
+            "w_o": dense_init(ks[6], (cfg.num_heads, m.v_head_dim, d), dt,
+                              fan_in=cfg.num_heads * m.v_head_dim),
+        }
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, cfg.num_heads, hd), dt),
+        "w_k": dense_init(ks[1], (d, cfg.num_kv_heads, hd), dt),
+        "w_v": dense_init(ks[2], (d, cfg.num_kv_heads, hd), dt),
+        "w_o": dense_init(ks[3], (cfg.num_heads, hd, d), dt,
+                          fan_in=cfg.num_heads * hd),
+    }
+    if cfg.attn_bias:
+        p["b_q"] = jnp.zeros((cfg.num_heads, hd), dt)
+        p["b_k"] = jnp.zeros((cfg.num_kv_heads, hd), dt)
+        p["b_v"] = jnp.zeros((cfg.num_kv_heads, hd), dt)
+        p["b_o"] = jnp.zeros((d,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def cache_capacity(cfg: ModelConfig, max_seq: int) -> int:
+    """Ring-buffer capacity: sliding-window archs bound the cache."""
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Per-layer cache pytree (stacked across layers by the caller)."""
+    S = cache_capacity(cfg, max_seq)
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, S, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, S, m.qk_rope_head_dim), dtype),
+        }
+    if cfg.attn_type == "none":
+        return {}
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct version of init_cache (for dry-run input_specs)."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype)))
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    dt = cfg.cdtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["w_q"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["w_k"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["w_v"].astype(dt))
+    if cfg.attn_bias:
+        q = q + params["b_q"].astype(dt)
+        k = k + params["b_k"].astype(dt)
+        v = v + params["b_v"].astype(dt)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm_simple(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(params, o, cfg: ModelConfig):
+    dt = cfg.cdtype
+    out = jnp.einsum("bthk,hkd->btd", o, params["w_o"].astype(dt))
+    if cfg.attn_bias:
+        out = out + params["b_o"].astype(dt)
+    return out
+
+
+def _mla_q(params, x, cfg: ModelConfig, positions):
+    dt = cfg.cdtype
+    m = cfg.mla
+    cq = x @ params["w_dq"].astype(dt)
+    cq = rms_norm_simple(cq, params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("btl,lhk->bthk", cq, params["w_uq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_compressed(params, x, cfg: ModelConfig, positions):
+    """Latent KV: normalized c_kv plus rope'd shared k_rope."""
+    dt = cfg.cdtype
+    c_kv = x @ params["w_dkv"].astype(dt)
+    c_kv = rms_norm_simple(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = (x @ params["w_kr"].astype(dt))[:, :, None, :]   # [B,T,1,R]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attend(
+    params,
+    x: jax.Array,                     # [B, T, d]
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,             # [B, T]
+    causal: bool = True,
+    cache: Optional[dict] = None,     # if given: prefill → fill cache
+) -> Tuple[jax.Array, Optional[dict]]:
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    window = cfg.sliding_window if cfg.attn_type == "swa" else 0
+
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        q_nope, q_rope = _mla_q(params, x, cfg, positions)
+        c_kv, k_rope = _mla_kv_compressed(params, x, cfg, positions)
+        k_nope = jnp.einsum("btl,lhk->bthk", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("btl,lhk->bthk", c_kv, params["w_uv"].astype(dt))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1)
+        sm_scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        o = ops.flash_attention(q, k, v, causal=causal, window=0,
+                                softcap=cfg.attn_logit_softcap,
+                                q_positions=positions, kv_positions=positions,
+                                sm_scale=sm_scale)
+        out = jnp.einsum("bthk,hkd->btd", o, params["w_o"].astype(dt))
+        if cache is not None:
+            cache = _fill_cache_mla(cache, c_kv, k_rope, positions)
+        return out, cache
+
+    q, k, v = _qkv(params, x, cfg, positions)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            q_positions=positions, kv_positions=positions)
+    out = _out_proj(params, o, cfg)
+    if cache is not None:
+        cache = _fill_cache(cache, k, v, positions, cfg)
+    return out, cache
+
+
+def _ring_slots(positions, capacity):
+    return jnp.mod(positions, capacity)
+
+
+def _fill_cache(cache, k, v, positions, cfg: ModelConfig):
+    S = cache["k"].shape[1]
+    slots = _ring_slots(positions, S)                    # [B, T]
+    bidx = jnp.arange(k.shape[0])[:, None]
+    cache = dict(cache)
+    cache["k"] = cache["k"].astype(k.dtype).at[bidx, slots].set(k)
+    cache["v"] = cache["v"].astype(v.dtype).at[bidx, slots].set(v)
+    return cache
+
+
+def _fill_cache_mla(cache, c_kv, k_rope, positions):
+    S = cache["c_kv"].shape[1]
+    slots = _ring_slots(positions, S)
+    bidx = jnp.arange(c_kv.shape[0])[:, None]
+    cache = dict(cache)
+    cache["c_kv"] = cache["c_kv"].astype(c_kv.dtype).at[bidx, slots].set(c_kv)
+    cache["k_rope"] = cache["k_rope"].astype(k_rope.dtype).at[bidx, slots].set(k_rope)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    params,
+    x: jax.Array,                     # [B, 1, d]
+    cfg: ModelConfig,
+    cache: dict,
+    cache_len: jax.Array,             # [B] tokens already in cache
+) -> Tuple[jax.Array, dict]:
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    B = x.shape[0]
+    positions = cache_len[:, None]                        # new token's position
+
+    if cfg.attn_type == "mla":
+        return _decode_step_mla(params, x, cfg, cache, cache_len, positions)
+
+    q, k, v = _qkv(params, x, cfg, positions)
+    cache = _fill_cache(cache, k, v, positions, cfg)
+    S = cache["k"].shape[1]
+    valid = jnp.minimum(cache_len + 1, S)
+    window = cfg.sliding_window if cfg.attn_type == "swa" else 0
+    # ring cache already bounds SWA to the window → no extra window mask
+    o = ops.decode_attention(q[:, 0], cache["k"], cache["v"], valid,
+                             softcap=cfg.attn_logit_softcap,
+                             window=0 if cfg.sliding_window > 0 else window)
+    out = _out_proj(params, o[:, None], cfg)
+    return out, cache
+
+
+def _decode_step_mla(params, x, cfg, cache, cache_len, positions):
+    """Weight-absorbed MLA decode: attention entirely in latent space.
+
+    q_lat[b,h,l]   = Σ_k q_nope[b,h,k] W_uk[l,h,k]
+    logit[b,h,s]   = q_lat·c_kv[b,s] + q_rope[b,h]·k_rope[b,s]
+    out[b,h,v]     = (Σ_s p[b,h,s] c_kv[b,s,l]) W_uv[l,h,v]
+    """
+    dt = cfg.cdtype
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)     # [B,1,H,*]
+    c_kv_new, k_rope_new = _mla_kv_compressed(params, x, cfg, positions)
+    cache = _fill_cache_mla(cache, c_kv_new, k_rope_new, positions)
+    S = cache["c_kv"].shape[1]
+    valid = jnp.minimum(cache_len + 1, S)
+
+    q_lat = jnp.einsum("bhk,lhk->bhl", q_nope[:, 0], params["w_uk"].astype(dt))
+    # latent "keys" are c_kv itself; append rope part → MQA with 1 kv head
+    q_cat = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)       # [B,H,L+R]
+    kv_cat = jnp.concatenate([cache["c_kv"], cache["k_rope"]], axis=-1)
+    sm_scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o_lat = ops.decode_attention(
+        q_cat, kv_cat[:, :, None, :], cache["c_kv"][:, :, None, :], valid,
+        softcap=cfg.attn_logit_softcap, sm_scale=sm_scale)        # [B,H,L]
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, params["w_uv"].astype(dt))
+    out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(dt))
+    return out[:, None, :], cache

@@ -1,0 +1,252 @@
+"""Shared layers: norms, rotary embeddings, MLP variants, initializers.
+
+Pure-functional style: ``init_*`` returns a params pytree (nested dicts of
+jnp arrays), ``apply`` functions take (params, inputs, cfg).  Parameter leaf
+names are stable — the sharding rules in ``repro.distributed.sharding`` key
+on them.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def _moments_f32(x):
+    """Per-row (mean, mean-of-squares) in f32 WITHOUT an f32 convert of x.
+
+    Implemented as dot_generals with ``preferred_element_type=f32`` (widening
+    accumulation).  An explicit ``x.astype(f32)`` makes XLA hoist the convert
+    over the scan's saved residual stack (convert(slice)→slice(convert) LICM),
+    materializing an f32 copy of the whole [L, B, T, d] stack — observed
+    +11 GiB/device on the dry-run.
+    """
+    d = x.shape[-1]
+    ones = jnp.ones((d,), x.dtype)
+    mean = jnp.einsum("...d,d->...", x, ones,
+                      preferred_element_type=jnp.float32)[..., None] / d
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    return mean, ms
+
+
+# --- fused-semantics norms -------------------------------------------------
+# custom_vjp so that BOTH passes touch x only via bf16 elementwise ops and
+# widening dots.  A naive norm's transpose consumes saved x in f32; XLA then
+# hoists that convert over the whole scan residual stack (+11 GiB/device on
+# the dry-run).  This is exactly the contract of a fused norm kernel — the
+# Pallas kernel (kernels/rmsnorm.py) implements the same math on TPU.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_cv(x, scale, eps):
+    y, _ = _rmsnorm_fwd(x, scale, eps)
+    return y
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    dt = x.dtype
+    _, ms = _moments_f32(x)
+    inv = jax.lax.rsqrt(ms + eps)                       # f32 [..., 1]
+    y = x * inv.astype(dt) * scale.astype(dt)
+    return y, (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, scale, inv = res
+    dt = x.dtype
+    d = x.shape[-1]
+    gs = g * scale.astype(dt)                           # bf16
+    # t = Σ gs·x per row (f32 widening dot)
+    t = jnp.einsum("...d,...d->...", gs, x,
+                   preferred_element_type=jnp.float32)[..., None]
+    coef = (-(inv ** 3) * t / d).astype(dt)             # f32 scalar/row → bf16
+    dx = gs * inv.astype(dt) + x * coef
+    xhat = x * inv.astype(dt)
+    dscale = jnp.einsum("...d,...d->d", g, xhat,
+                        preferred_element_type=jnp.float32).astype(scale.dtype)
+    return dx, dscale
+
+
+_rmsnorm_cv.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _layernorm_cv(x, scale, bias, eps):
+    y, _ = _layernorm_fwd(x, scale, bias, eps)
+    return y
+
+
+def _layernorm_fwd(x, scale, bias, eps):
+    dt = x.dtype
+    mean, ms = _moments_f32(x)
+    var = ms - jnp.square(mean)
+    inv = jax.lax.rsqrt(var + eps)                      # f32 [..., 1]
+    xhat = (x - mean.astype(dt)) * inv.astype(dt)
+    y = xhat * scale.astype(dt) + bias.astype(dt)
+    return y, (x, scale, mean, inv)
+
+
+def _layernorm_bwd(eps, res, g):
+    x, scale, mean, inv = res
+    dt = x.dtype
+    d = x.shape[-1]
+    xhat = (x - mean.astype(dt)) * inv.astype(dt)
+    gs = g * scale.astype(dt)
+    ones = jnp.ones((d,), dt)
+    m1 = jnp.einsum("...d,d->...", gs, ones,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    m2 = jnp.einsum("...d,...d->...", gs, xhat,
+                    preferred_element_type=jnp.float32)[..., None] / d
+    dx = (gs - m1.astype(dt) - xhat * m2.astype(dt)) * inv.astype(dt)
+    dscale = jnp.einsum("...d,...d->d", g, xhat,
+                        preferred_element_type=jnp.float32).astype(scale.dtype)
+    dbias = jnp.einsum("...d,...d->d", g, jnp.ones_like(g),
+                       preferred_element_type=jnp.float32).astype(scale.dtype)
+    return dx, dscale, dbias
+
+
+_layernorm_cv.defvjp(_layernorm_fwd, _layernorm_bwd)
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return _layernorm_cv(x, p["scale"], p["bias"], cfg.norm_eps)
+    return _rmsnorm_cv(x, p["scale"], cfg.norm_eps)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    """Bare rmsnorm used inside MLA lora stacks / mamba out-norm."""
+    return _rmsnorm_cv(x, scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., :, None, :]                     # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, dff = cfg.d_model, (d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    if cfg.activation in ("swiglu", "geglu"):
+        p = {
+            "w_gate": dense_init(ks[0], (d, dff), dt),
+            "w_up": dense_init(ks[1], (d, dff), dt),
+            "w_down": dense_init(ks[2], (dff, d), dt, fan_in=dff),
+        }
+    else:  # relu2 | gelu — plain 2-matrix MLP
+        p = {
+            "w_up": dense_init(ks[0], (d, dff), dt),
+            "w_down": dense_init(ks[1], (dff, d), dt, fan_in=dff),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((dff,), dt)
+        p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True) * (
+            x @ p["w_up"].astype(dt))
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(dt)))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt), approximate=True)
+    else:
+        raise ValueError(cfg.activation)
+    if "b_up" in p:
+        h = h + p["b_up"].astype(dt)
+    out = h @ p["w_down"].astype(dt)
+    if "b_down" in p:
+        out = out + p["b_down"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / heads
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    return {"embedding": embed_init(key, (cfg.vocab_size, cfg.d_model), cfg.pdtype)}
+
+
+def apply_embedding(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    return x
+
+
+def apply_lm_head(embed_params, head_params, x, cfg: ModelConfig):
+    dt = cfg.cdtype
+    if cfg.tie_embeddings or head_params is None:
+        w = embed_params["embedding"].astype(dt)
+        logits = x @ w.T
+    else:
+        logits = x @ head_params["w_head"].astype(dt)
+    if cfg.final_logit_softcap > 0.0:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return None
+    return {"w_head": dense_init(key, (cfg.d_model, cfg.vocab_size), cfg.pdtype)}

@@ -1,0 +1,454 @@
+"""Mixture-of-Experts FFN with sort-based top-k dispatch (Mixtral / DeepSeek-V2).
+
+Two implementations share the same semantics (tested against each other):
+
+* ``_apply_moe_local``   — single-device reference: global sort + capacity
+  dispatch, no collectives.  Used on CPU tests and as the oracle.
+
+* ``_apply_moe_shardmap`` — the distributed path (used whenever sharding
+  rules are active).  Per-data-shard dispatch under ``jax.shard_map``:
+
+    1. every data shard top-k's and sorts ONLY its local tokens (the global
+       argsort of the naive path makes GSPMD all-gather the whole token
+       array — observed ~1 TiB/device temps on mixtral train_4k);
+    2. tokens scatter into a local [E, C_local, d] capacity buffer;
+    3. expert compute:
+         EP mode (E % tp == 0): all_to_all regroups the buffer so each
+         model shard holds its E/tp experts × all data shards' rows;
+         TP mode (E < tp):      every shard computes all experts on a
+         d_ff/tp slice, combined with one psum folded into the token
+         scatter-back;
+    4. ZeRO-3: FSDP-sharded expert weights are all-gathered (bf16) just
+       before use, inside the shard_map body.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import current_rules
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 5)
+    glu = cfg.activation in ("swiglu", "geglu")
+    shapes = {
+        "w_gate": (m.num_experts, d, m.d_expert),
+        "w_up": (m.num_experts, d, m.d_expert),
+        "w_down": (m.num_experts, m.d_expert, d),
+    }
+    if not glu:
+        shapes.pop("w_gate")
+    p = {"router": dense_init(ks[0], (d, m.num_experts), jnp.float32)}
+    for i, (name, shape) in enumerate(shapes.items()):
+        fan = d if name != "w_down" else m.d_expert
+        p[name] = dense_init(ks[1 + i], shape, dt, fan_in=fan)
+    if m.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.d_shared_expert)
+    return p
+
+
+def router_topk(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Softmax-then-topk router (Mixtral normalizes over the top-k)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.clip(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    return gate, idx
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array, num_experts: int):
+    """Switch-style load-balancing auxiliary loss."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [T, E]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(idx.size, 1)
+    frac_probs = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+# ---------------------------------------------------------------------------
+# shared dispatch pieces (operate on whatever token set they're given)
+# ---------------------------------------------------------------------------
+
+def _capacity(n_tok: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tok * m.top_k / m.num_experts * m.capacity_factor))
+    return max(c, 8)
+
+
+def _dispatch(xt, gate, idx, capacity, cfg: ModelConfig):
+    """Sort (token, expert) pairs → ([E, C, d] buffer, combine metadata)."""
+    m = cfg.moe
+    n_tok, d = xt.shape
+    n_pairs = n_tok * m.top_k
+
+    e_flat = idx.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(n_tok), m.top_k)
+    g_flat = gate.reshape(-1)
+
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    t_sorted = t_flat[order]
+
+    counts = jnp.zeros((m.num_experts,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(n_pairs, dtype=jnp.int32) - starts[e_sorted]
+
+    keep = pos_in_expert < capacity
+    slot = jnp.where(keep, e_sorted * capacity + pos_in_expert, n_pairs + 1)
+
+    buf = jnp.zeros((m.num_experts * capacity, d), xt.dtype)
+    buf = buf.at[slot].set(xt[t_sorted], mode="drop")
+    buf = buf.reshape(m.num_experts, capacity, d)
+    meta = (slot, keep, t_sorted, g_flat[order])
+    return buf, meta
+
+
+def _combine(y, meta, n_tok, dtype):
+    """Inverse of _dispatch: weighted scatter-add back to tokens."""
+    slot, keep, t_sorted, g_sorted = meta
+    E_C, d = y.shape[0] * y.shape[1], y.shape[2]
+    yf = y.reshape(E_C, d)
+    y_pairs = jnp.where(keep[:, None],
+                        yf[jnp.clip(slot, 0, E_C - 1)], 0.0)
+    out = jnp.zeros((n_tok, d), dtype).at[t_sorted].add(
+        y_pairs * g_sorted[:, None].astype(dtype))
+    return out
+
+
+def _expert_ffn(buf, w_gate, w_up, w_down, cfg: ModelConfig):
+    """buf: [E, C, d] → [E, C, d] through per-expert (possibly sliced) FFN."""
+    dt = cfg.cdtype
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(
+            g, approximate=True)
+        h = act * up
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# local (single-shard / oracle) path
+# ---------------------------------------------------------------------------
+
+def _apply_moe_local(p, x: jax.Array, cfg: ModelConfig):
+    m = cfg.moe
+    B, T, d = x.shape
+    dt = cfg.cdtype
+    n_tok = B * T
+    xt = x.reshape(n_tok, d).astype(dt)
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    gate, idx = router_topk(logits, m.top_k)
+    aux = aux_load_balance_loss(logits, idx, m.num_experts)
+
+    buf, meta = _dispatch(xt, gate, idx, _capacity(n_tok, cfg), cfg)
+    y = _expert_ffn(buf,
+                    p["w_gate"].astype(dt) if "w_gate" in p else None,
+                    p["w_up"].astype(dt), p["w_down"].astype(dt), cfg)
+    out = _combine(y, meta, n_tok, dt)
+    if m.num_shared_experts > 0:
+        out = out + apply_mlp(p["shared"], xt, cfg)
+    return out.reshape(B, T, d), aux * m.router_aux_weight
+
+
+# ---------------------------------------------------------------------------
+# int8 all-to-all (EP dispatch payload compression)
+# ---------------------------------------------------------------------------
+# The EP all-to-all moves every routed token's full d-vector twice per layer
+# (there and back) — the dominant collective of MoE training.  Quantizing
+# the payload to int8 with a per-row scale halves the wire bytes; the
+# backward pass is a straight-through bf16 all-to-all of the gradients
+# (quantization noise is forward-only, bounded by row-max/254).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def a2a_int8(x, axis_name, split_axis, concat_axis):
+    out, _ = _a2a_int8_fwd(x, axis_name, split_axis, concat_axis)
+    return out
+
+
+def _a2a_int8_fwd(x, axis_name, split_axis, concat_axis):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    q2 = jax.lax.all_to_all(q, axis_name, split_axis=split_axis,
+                            concat_axis=concat_axis, tiled=True)
+    s2 = jax.lax.all_to_all(scale, axis_name, split_axis=split_axis,
+                            concat_axis=concat_axis, tiled=True)
+    return (q2.astype(jnp.float32) * s2).astype(x.dtype), None
+
+
+def _a2a_int8_bwd(axis_name, split_axis, concat_axis, _res, g):
+    # transpose of a tiled all_to_all swaps split/concat axes
+    return (jax.lax.all_to_all(g, axis_name, split_axis=concat_axis,
+                               concat_axis=split_axis, tiled=True),)
+
+
+a2a_int8.defvjp(_a2a_int8_fwd, _a2a_int8_bwd)
+
+
+# ---------------------------------------------------------------------------
+# shard_map (distributed) path
+# ---------------------------------------------------------------------------
+
+def _dp_axes(rules) -> Tuple[str, ...]:
+    ax = rules.rules.get("batch")
+    if ax is None:
+        return ()
+    ax = (ax,) if isinstance(ax, str) else tuple(ax)
+    return tuple(a for a in ax if a in rules.mesh.shape)
+
+
+def _gather_fsdp(w, spec: P, dt):
+    """bf16-cast then all-gather the FSDP-sharded dims of a weight."""
+    w = w.astype(dt)
+    for axis_idx, ax in enumerate(spec):
+        if ax is None:
+            continue
+        names = (ax,) if isinstance(ax, str) else ax
+        for name in names:
+            if name in ("data", "pod"):
+                w = jax.lax.all_gather(w, name, axis=axis_idx, tiled=True)
+    return w
+
+
+def _apply_moe_shardmap(p, x: jax.Array, cfg: ModelConfig, rules):
+    from repro.distributed import sharding as shlib
+
+    m = cfg.moe
+    mesh = rules.mesh
+    B, T, d = x.shape
+    dt = cfg.cdtype
+    n_tok = B * T
+
+    dp = _dp_axes(rules)
+    dp_size = rules.mesh_axis_size(dp) if dp else 1
+    tp = "model" if "model" in mesh.shape else None
+    tp_size = mesh.shape.get("model", 1) if tp else 1
+
+    if dp_size > 1 and n_tok % dp_size != 0:
+        dp = ()
+        dp_size = 1
+
+    # serve2d rules (batch replicated, embed→data): decode-latency path —
+    # weights stay fully sharded over BOTH axes and are never gathered;
+    # each matmul ends in a small psum instead (see _apply_moe_tp2d)
+    if (rules.rules.get("batch") is None
+            and rules.rules.get("embed") is not None and tp is not None
+            and d % rules.mesh_axis_size(rules.rules["embed"]) == 0):
+        return _apply_moe_tp2d(p, x, cfg, rules)
+
+    ep_mode = tp is not None and m.num_experts % tp_size == 0
+
+    # weight specs must match the declared param partitioning exactly
+    glu = cfg.activation in ("swiglu", "geglu")
+    if ep_mode:
+        w_spec = P("model", "data", None)
+        w_down_spec = P("model", None, "data")
+    else:
+        w_spec = P(None, "data", "model")
+        w_down_spec = P(None, "model", "data")
+    shared_specs = None
+    if m.num_shared_experts > 0:
+        shared_specs = {
+            k: P("data", "model") if k in ("w_gate", "w_up") else
+               (P("model", "data") if k == "w_down" else P(None))
+            for k in p["shared"]}
+
+    n_loc = n_tok // dp_size
+    cap = _capacity(n_loc, cfg)
+
+    def body(xt, router, w_gate, w_up, w_down, shared):
+        # xt: [n_loc, d] local tokens (replicated over tp)
+        logits = xt.astype(jnp.float32) @ router
+        gate, idx = router_topk(logits, m.top_k)
+        aux = aux_load_balance_loss(logits, idx, m.num_experts)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+
+        buf, meta = _dispatch(xt, gate, idx, cap, cfg)   # [E, C, d]
+
+        if ep_mode:
+            # regroup: every tp shard gets its E/tp experts, all rows
+            if m.dispatch_quant == "int8":
+                buf = a2a_int8(buf, tp, 0, 1)             # [E/tp, C*tp, d]
+            else:
+                buf = jax.lax.all_to_all(buf, tp, split_axis=0,
+                                         concat_axis=1, tiled=True)
+            wg = _gather_fsdp(w_gate, w_spec, dt) if glu else None
+            wu = _gather_fsdp(w_up, w_spec, dt)
+            wd = _gather_fsdp(w_down, w_down_spec, dt)
+            y = _expert_ffn(buf, wg, wu, wd, cfg)
+            if m.dispatch_quant == "int8":
+                y = a2a_int8(y, tp, 1, 0)                 # [E, C, d]
+            else:
+                y = jax.lax.all_to_all(y, tp, split_axis=1, concat_axis=0,
+                                       tiled=True)
+            out = _combine(y, meta, n_loc, dt)
+            partial = None
+        else:
+            # per-expert TP: all experts, d_ff/tp slice each
+            wg = _gather_fsdp(w_gate, w_spec, dt) if glu else None
+            wu = _gather_fsdp(w_up, w_spec, dt)
+            wd = _gather_fsdp(w_down, w_down_spec, dt)
+            y = _expert_ffn(buf, wg, wu, wd, cfg)         # partial over tp
+            partial = _combine(y, meta, n_loc, dt)
+            out = None
+
+        if m.num_shared_experts > 0:
+            # shared expert: d_ff sharded over tp → partial sum
+            sg = _gather_fsdp(shared["w_gate"], P("data", "model"), dt) \
+                if "w_gate" in shared else None
+            su = _gather_fsdp(shared["w_up"], P("data", "model"), dt)
+            sd = _gather_fsdp(shared["w_down"], P("model", "data"), dt)
+            h = xt.astype(dt) @ su
+            if sg is not None:
+                act = jax.nn.silu(xt.astype(dt) @ sg)
+                h = act * h
+            elif cfg.activation == "relu2":
+                h = jnp.square(jax.nn.relu(h))
+            else:
+                h = jax.nn.gelu(h, approximate=True)
+            sh_partial = h @ sd
+            partial = sh_partial if partial is None else partial + sh_partial
+
+        if partial is not None:
+            summed = jax.lax.psum(partial, tp) if tp else partial
+            out = summed if out is None else out + summed
+        return out, aux
+
+    in_specs = (
+        P(dp if dp else None, None),          # tokens
+        P(None, None),                        # router
+        w_spec, w_spec, w_down_spec,          # expert weights
+        shared_specs,                         # shared expert (or None)
+    )
+    out_specs = (P(dp if dp else None, None), P())
+
+    xt = x.reshape(n_tok, d).astype(dt)
+    xt = shlib.shard(xt.reshape(B, T, d), "batch", None, None).reshape(n_tok, d)
+
+    args = [xt, p["router"],
+            p.get("w_gate", jnp.zeros((0,), dt)), p["w_up"], p["w_down"],
+            p.get("shared")]
+    if "w_gate" not in p:
+        in_specs = (in_specs[0], in_specs[1], P(None), in_specs[3],
+                    in_specs[4], in_specs[5])
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(*args)
+    return out.reshape(B, T, d), aux * m.router_aux_weight
+
+
+def _apply_moe_tp2d(p, x: jax.Array, cfg: ModelConfig, rules):
+    """2-D tensor-parallel MoE for decode (serve2d rules).
+
+    Tokens are replicated; activations carry d sharded over the data axis
+    and d_ff over the model axis.  No weight ever moves — each expert
+    einsum contracts its local shard and a psum over the contracted axis's
+    mesh dimension combines ([E, C, ·]-sized, tiny at decode batch sizes).
+    """
+    m = cfg.moe
+    mesh = rules.mesh
+    B, T, d = x.shape
+    dt = cfg.cdtype
+    n_tok = B * T
+    glu = cfg.activation in ("swiglu", "geglu")
+    row = rules.rules["embed"]          # mesh axes holding the d shard
+    row_axes = (row,) if isinstance(row, str) else tuple(row)
+    cap = _capacity(n_tok, cfg)
+
+    def body(xt_loc, router_loc, w_gate, w_up, w_down, shared):
+        # xt_loc: [n, d_loc]; router_loc: [d_loc, E]
+        logits = jax.lax.psum(
+            xt_loc.astype(jnp.float32) @ router_loc, row_axes)
+        gate, idx = router_topk(logits, m.top_k)
+        aux = aux_load_balance_loss(logits, idx, m.num_experts)
+
+        buf, meta = _dispatch(xt_loc, gate, idx, cap, cfg)   # [E, C, d_loc]
+        up = jax.lax.psum(
+            jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dt)), row_axes)
+        if glu:
+            g = jax.lax.psum(
+                jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dt)), row_axes)
+            act = jax.nn.silu(g) if cfg.activation == "swiglu" else \
+                jax.nn.gelu(g, approximate=True)
+            h = act * up
+        elif cfg.activation == "relu2":
+            h = jnp.square(jax.nn.relu(up))
+        else:
+            h = jax.nn.gelu(up, approximate=True)
+        y = jax.lax.psum(
+            jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt)), "model")
+        out = _combine(y, meta, n_tok, dt)                   # [n, d_loc]
+
+        if m.num_shared_experts > 0:
+            hs = jax.lax.psum(xt_loc.astype(dt) @ shared["w_up"].astype(dt),
+                              row_axes)
+            if "w_gate" in shared:
+                gs = jax.lax.psum(
+                    xt_loc.astype(dt) @ shared["w_gate"].astype(dt), row_axes)
+                hs = jax.nn.silu(gs) * hs
+            elif cfg.activation == "relu2":
+                hs = jnp.square(jax.nn.relu(hs))
+            else:
+                hs = jax.nn.gelu(hs, approximate=True)
+            out = out + jax.lax.psum(hs @ shared["w_down"].astype(dt),
+                                     "model")
+        return out, aux
+
+    row_spec = row if isinstance(row, str) else tuple(row)
+    in_specs = (
+        P(None, row_spec),                       # tokens (d sharded)
+        P(row_spec, None),                       # router
+        P(None, row_spec, "model"),              # w_gate
+        P(None, row_spec, "model"),              # w_up
+        P(None, "model", row_spec),              # w_down
+        {k: (P(row_spec, "model") if k in ("w_gate", "w_up")
+             else P("model", row_spec))
+         for k in p["shared"]} if m.num_shared_experts > 0 else None,
+    )
+    out_specs = (P(None, row_spec), P())
+
+    xt = x.reshape(n_tok, d).astype(dt)
+    args = [xt, p["router"],
+            p.get("w_gate", jnp.zeros((0,), dt)), p["w_up"], p["w_down"],
+            p.get("shared")]
+    if "w_gate" not in p:
+        in_specs = (in_specs[0], in_specs[1], P(None), in_specs[3],
+                    in_specs[4], in_specs[5])
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(*args)
+    return out.reshape(B, T, d), aux * m.router_aux_weight
+
+
+# ---------------------------------------------------------------------------
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig):
+    """x: [B, T, d] → (out [B, T, d], aux_loss scalar)."""
+    rules = current_rules()
+    if rules is not None and rules.mesh is not None and (
+            rules.mesh_axis_size(("model",)) > 1
+            or rules.mesh_axis_size(rules.rules.get("batch")) > 1):
+        return _apply_moe_shardmap(p, x, cfg, rules)
+    return _apply_moe_local(p, x, cfg)

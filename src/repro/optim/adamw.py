@@ -1,0 +1,189 @@
+"""Sharded AdamW with fp32 or 8-bit (block-quantized) moment states.
+
+The 8-bit variant is the distributed-optimization trick that lets the 236B/
+340B configs fit a 256-chip pod: m/v are stored as int8 with per-block fp32
+scales (block = trailing-dim groups of 256), dequantized on the fly inside
+the (fully sharded) update.  Error is bounded by the block max; this is the
+standard "8-bit Adam" recipe adapted to sharding-friendly blocking along the
+trailing axis only (so quantization blocks never cross shard boundaries for
+our partition specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak lr (schedules multiply this)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    state_dtype: str = "float32"     # float32 | int8
+    quant_block: int = 256
+
+
+class QuantMoment(NamedTuple):
+    """int8 payload + per-block fp32 scale/bias (trailing-axis blocking)."""
+    q: jax.Array
+    scale: jax.Array
+
+
+def _quantize(x: jax.Array, block: int) -> QuantMoment:
+    """Linear blockwise int8 (signed values — the first moment)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QuantMoment(q=q, scale=scale.astype(jnp.float32))
+
+
+def _dequantize(qm: QuantMoment, shape: Tuple[int, ...]) -> jax.Array:
+    flat = (qm.q.astype(jnp.float32) * qm.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+_LOG_TINY = 1e-30
+
+
+def _quantize_log(x: jax.Array, block: int) -> QuantMoment:
+    """Blockwise int8 in LOG space (non-negative values — second moment).
+
+    Linear quantization of v misrepresents small-magnitude coordinates by
+    up to the block's dynamic range (update error ≈ 4× observed); log-space
+    gives uniform *relative* precision: err ≈ exp(range/254) − 1.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = jnp.log(jnp.maximum(flat.reshape(-1, block), 0.0) + _LOG_TINY)
+    lo = jnp.min(blocks, axis=1, keepdims=True)
+    hi = jnp.max(blocks, axis=1, keepdims=True)
+    mid = (hi + lo) * 0.5
+    half = jnp.maximum((hi - lo) * 0.5, 1e-8)
+    q = jnp.clip(jnp.round((blocks - mid) / half * 127.0),
+                 -127, 127).astype(jnp.int8)
+    scale = jnp.concatenate([mid, half], axis=1).astype(jnp.float32)
+    return QuantMoment(q=q, scale=scale)
+
+
+def _dequantize_log(qm: QuantMoment, shape: Tuple[int, ...]) -> jax.Array:
+    mid = qm.scale[:, :1]
+    half = qm.scale[:, 1:]
+    u = qm.q.astype(jnp.float32) / 127.0 * half + mid
+    flat = jnp.maximum(jnp.exp(u) - _LOG_TINY, 0.0).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def init_state(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    def zero_m(p):
+        if cfg.state_dtype == "int8":
+            return _quantize(jnp.zeros_like(p, jnp.float32), cfg.quant_block)
+        return jnp.zeros_like(p, jnp.float32)
+
+    def zero_v(p):
+        if cfg.state_dtype == "int8":
+            return _quantize_log(jnp.zeros_like(p, jnp.float32),
+                                 cfg.quant_block)
+        return jnp.zeros_like(p, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_m, params),
+        "v": jax.tree.map(zero_v, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(
+    params: Params,
+    grads: Params,
+    state: Dict[str, Any],
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip_norm > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    is_q = cfg.state_dtype == "int8"
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _dequantize(m, p.shape) if is_q else m
+        vf = _dequantize_log(v, p.shape) if is_q else v
+        mf = cfg.b1 * mf + (1.0 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2 and cfg.weight_decay > 0:   # decay matrices only
+            delta = delta + cfg.weight_decay * pf
+        new_p = (pf - lr * delta).astype(p.dtype)
+        new_m = _quantize(mf, cfg.quant_block) if is_q else mf
+        new_v = _quantize_log(vf, cfg.quant_block) if is_q else vf
+        return new_p, new_m, new_v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics
+
+
+def state_partition_specs(param_specs, cfg: AdamWConfig):
+    """Optimizer-state specs mirror the param specs (moments shard alike).
+
+    int8 moments are flattened+blocked, so they take the replicated spec of
+    a 2D [blocks, block] layout — sharding them over `data` (ZeRO) happens
+    via the blocks axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def moment_spec(ps):
+        if cfg.state_dtype == "int8":
+            return QuantMoment(q=P("data"), scale=P("data"))
+        return ps
+
+    return {
+        "step": P(),
+        "m": jax.tree.map(moment_spec, param_specs,
+                          is_leaf=lambda s: isinstance(s, P)),
+        "v": jax.tree.map(moment_spec, param_specs,
+                          is_leaf=lambda s: isinstance(s, P)),
+    }

@@ -1,0 +1,29 @@
+"""LR schedules (pure functions of step → multiplier)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_ratio: float = 0.1
+    kind: str = "cosine"   # cosine | linear | constant
+
+
+def lr_multiplier(step, cfg: ScheduleConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        return warm
+    frac = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.kind == "linear":
+        decay = 1.0 - (1.0 - cfg.min_ratio) * frac
+    else:  # cosine
+        decay = cfg.min_ratio + (1.0 - cfg.min_ratio) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * frac))
+    return warm * decay

@@ -1,0 +1,186 @@
+"""Continuous-batching serving engine.
+
+One decode program (fixed ``max_slots`` batch) advances every active request
+each tick; prefills are bucketed by prompt length so the container-class
+executor compiles a handful of shapes, not one per request.  Inactive slots
+ride along masked (their cache_len doesn't advance; the slot row they write
+is beyond their valid length, hence harmless) — so the engine never
+retraces as requests come and go.
+
+SLO-aware admission: requests carry ``latency_slo_ms``; the engine admits
+while slots remain and estimates queue delay for telemetry the autoscaler
+(core.orchestrator.autoscale) consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.serving.kv_cache import SlotKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [T] int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    latency_slo_ms: float = 0.0
+    submitted_at: float = 0.0
+    # filled by the engine
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+def _buckets(max_seq: int) -> List[int]:
+    out, b = [], 16
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return out
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, max_slots: int = 4,
+                 max_seq: int = 256, params: Optional[Any] = None,
+                 seed: int = 0, mesh=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.key(seed))
+        self.mesh = mesh
+        self.kv = SlotKVCache(cfg, max_slots, max_seq)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.buckets = _buckets(max_seq)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.completed: List[Request] = []
+        self.last_tokens = jnp.zeros((max_slots,), jnp.int32)
+        self._rid = itertools.count()
+        self.ticks = 0
+
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_fn,
+                                static_argnames=("bucket",))
+
+    # ------------------------------------------------------------------
+    @property
+    def _stateful(self) -> bool:
+        """Families whose prefill must not see pad tokens (SSM state / SWA
+        ring cache) → exact-length prefill instead of pow2 buckets."""
+        return self.cfg.family in ("ssm", "hybrid") or \
+            self.cfg.sliding_window > 0
+
+    def _prefill_fn(self, params, tokens, last_index, *, bucket: int):
+        caches = self.model.init_caches(1, self.max_seq)
+        batch = {"tokens": tokens}
+        logits, caches, clen = self.model.prefill(
+            params, batch, caches, last_index=last_index)
+        return logits, caches, clen
+
+    def _decode_fn(self, params, caches, tokens, cache_len, active):
+        logits, caches = self.model.decode(params, tokens, caches, cache_len)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tokens = jnp.where(active, next_tokens, tokens)
+        new_len = jnp.where(active, cache_len + 1, cache_len)
+        return next_tokens, caches, new_len
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_token: Optional[int] = None,
+               latency_slo_ms: float = 0.0) -> int:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_token, latency_slo_ms,
+                      submitted_at=time.time())
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        while self.queue and self.kv.free_slots:
+            req = self.queue.pop(0)
+            slot = self.kv.alloc()
+            plen = len(req.prompt)
+            bucket = plen if self._stateful else next(
+                b for b in self.buckets if b >= plen)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            logits, pcache, _ = self._prefill(
+                self.params, jnp.asarray(padded),
+                jnp.asarray([plen - 1], jnp.int32), bucket=bucket)
+            # prefill yields the FIRST generated token; decode does the rest
+            first = int(np.asarray(jnp.argmax(logits, -1))[0])
+            self.kv.insert(pcache, slot, plen)
+            self.last_tokens = self.last_tokens.at[slot].set(first)
+            req.slot = slot
+            req.generated.append(first)
+            req.first_token_at = time.time()
+            self.active[req.rid] = req
+            if (req.eos_token is not None and first == req.eos_token) or \
+                    req.max_new_tokens <= 1:
+                req.done = True
+                req.finished_at = req.first_token_at
+                self.kv.free(slot)
+                del self.active[req.rid]
+                self.completed.append(req)
+
+    def step(self) -> int:
+        """One engine tick: admit + one decode for all active slots."""
+        self._admit()
+        if not self.active:
+            return 0
+        active_mask = np.zeros((self.max_slots,), bool)
+        for req in self.active.values():
+            active_mask[req.slot] = True
+        tokens, self.kv.caches, self.kv.cache_len = self._decode(
+            self.params, self.kv.caches, self.last_tokens,
+            self.kv.cache_len, jnp.asarray(active_mask))
+        self.last_tokens = tokens
+        toks = np.asarray(tokens)
+        now = time.time()
+        finished = []
+        for req in self.active.values():
+            t = int(toks[req.slot])
+            req.generated.append(t)
+            if req.first_token_at is None:
+                req.first_token_at = now
+            if (req.eos_token is not None and t == req.eos_token) or \
+                    len(req.generated) >= req.max_new_tokens or \
+                    int(self.kv.cache_len[req.slot]) >= self.kv.max_seq - 1:
+                finished.append(req)
+        for req in finished:
+            req.done = True
+            req.finished_at = now
+            self.kv.free(req.slot)
+            del self.active[req.rid]
+            self.completed.append(req)
+        self.ticks += 1
+        return len(self.active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.active:
+                break
+            self.step()
+        return list(self.completed)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {
+            "ticks": self.ticks,
+            "active": len(self.active),
+            "queued": len(self.queue),
+            "slot_utilization": self.kv.utilization(),
+        }

@@ -1,0 +1,60 @@
+"""Slot-based KV cache manager for continuous batching.
+
+The engine owns one big cache tree of ``max_slots`` sequences (stacked along
+the batch axis of every leaf).  Requests claim a slot, prefill produces a
+batch-1 cache that is scattered into the slot, and the decode step advances
+all slots together.  Sliding-window archs keep their ring-buffer semantics
+(the per-layer cache capacity is already window-bounded by
+``attention.cache_capacity``); SSM/hybrid archs store recurrent states in
+the same tree — slot logic is family-agnostic because caches are pytrees
+with a consistent batch axis position per leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer
+
+class SlotKVCache:
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_seq: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.caches = transformer.init_cache_tree(cfg, max_slots, max_seq,
+                                                  dtype)
+        # probe batch axes: build a 1-slot tree and diff the shapes
+        probe = transformer.init_cache_tree(cfg, 1, max_seq, dtype)
+        self.batch_axes = jax.tree.map(
+            lambda big, small: next(
+                i for i, (a, b) in enumerate(zip(big.shape, small.shape))
+                if a != b),
+            self.caches, probe)
+        self.free_slots: List[int] = list(range(max_slots))
+        self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        return self.free_slots.pop(0) if self.free_slots else None
+
+    def free(self, slot: int):
+        assert 0 <= slot < self.max_slots
+        self.free_slots.append(slot)
+
+    def insert(self, slot_caches: Any, slot: int, length: int):
+        """Scatter a 1-sequence cache tree into `slot` (jit-friendly)."""
+        def put(big, small, axis):
+            idx = [0] * big.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                                tuple(idx))
+        self.caches = jax.tree.map(put, self.caches, slot_caches,
+                                   self.batch_axes)
+        self.cache_len = self.cache_len.at[slot].set(length)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_slots) / self.max_slots

@@ -1,0 +1,139 @@
+"""Builders wiring the model/stream layers into the hybrid runtime.
+
+This module is the concrete edge-system assembly (paper fig 1): it teaches
+the ConfigurationManager how to construct
+  * container-class executors for heavy workloads: full ServingEngine-backed
+    prefill/decode entry points, or a train step;
+  * unikernel-class executors for light workloads: AOT images for
+    single-stream decode and for the Fitbit-analytics kernel, with donated
+    state buffers, built through the shared image registry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import (BaseExecutor, ContainerExecutor,
+                                 UnikernelExecutor)
+from repro.core.manager import ConfigurationManager
+from repro.core.registry import ImageRegistry
+from repro.core.workload import Workload, WorkloadClass, WorkloadKind
+from repro.data import stream as stream_lib
+from repro.launch import programs
+from repro.models.model import build_model
+
+
+def make_container_builder(cfg, params=None, seed: int = 0):
+    """Container-class: feature-rich LM executor (prefill+decode+train)."""
+    model = build_model(cfg)
+    p = params if params is not None else model.init(jax.random.key(seed))
+
+    def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
+        def prefill(tokens, caches):
+            batch = {"tokens": tokens}
+            return model.prefill(p, batch, caches)
+
+        def decode(tokens, caches, cache_len):
+            return model.decode(p, tokens, caches, cache_len)
+
+        def train(opt_state, batch, tcfg=programs.default_train_config(cfg)):
+            step = programs.build_train_step(cfg, tcfg)
+            return step(p, opt_state, batch)
+
+        def infer(inputs):
+            """Generic single-shot inference (the paper's CV-detection
+            analogue): features/tokens in → class predictions out."""
+            key = "features" if cfg.frontend == "audio_frames" else "tokens"
+            logits, _ = model.forward(p, {key: inputs})
+            return jnp.argmax(logits, axis=-1)
+
+        ex = ContainerExecutor(
+            name=f"container[{cfg.name}]",
+            entry_points={"prefill": prefill, "decode": decode,
+                          "train": train, "generic": infer},
+            state={"params": p}, mesh=mesh)
+        return ex, ex.footprint_bytes()
+
+    return builder
+
+
+def make_unikernel_decode_builder(cfg, registry: ImageRegistry,
+                                  params=None, seed: int = 0,
+                                  max_seq: int = 128):
+    """Unikernel-class: single-stream (batch=1) decode, one frozen shape."""
+    model = build_model(cfg)
+    p = params if params is not None else model.init(jax.random.key(seed))
+
+    def decode_step(params_, tokens, caches, cache_len):
+        logits, caches = model.decode(params_, tokens, caches, cache_len)
+        return jnp.argmax(logits, -1).astype(jnp.int32), caches, cache_len + 1
+
+    def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
+        caches = model.init_caches(1, max_seq)
+        args = (p, jnp.zeros((1,), jnp.int32), caches,
+                jnp.zeros((1,), jnp.int32))
+        image = registry.get_or_build(
+            f"unikernel-decode[{cfg.name}]", decode_step, args,
+            donate_argnums=(2,), mesh=mesh)
+        ex = UnikernelExecutor(f"unikernel[{cfg.name}]", image, mesh=mesh)
+        return ex, ex.footprint_bytes()
+
+    return builder
+
+
+def make_stream_builder(registry: ImageRegistry,
+                        scfg: stream_lib.StreamConfig):
+    """Unikernel-class: the paper's Fitbit analytics task, AOT + donated."""
+
+    def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
+        state = stream_lib.init_state(scfg)
+        batch = {
+            "user_id": jnp.zeros((scfg.batch_records,), jnp.int32),
+            "total_steps": jnp.zeros((scfg.batch_records,), jnp.float32),
+            "total_distance": jnp.zeros((scfg.batch_records,), jnp.float32),
+            "calories": jnp.zeros((scfg.batch_records,), jnp.float32),
+        }
+        image = registry.get_or_build(
+            "unikernel-stream", stream_lib.analytics_step, (state, batch),
+            donate_argnums=(0,), mesh=mesh)
+        ex = UnikernelExecutor("unikernel[stream]", image, mesh=mesh)
+        return ex, ex.footprint_bytes()
+
+    return builder
+
+
+def make_stream_container_builder(scfg: stream_lib.StreamConfig):
+    """The SAME analytics task on a container-class executor — the paper's
+    fig 5 comparison (container vs unikernel on one data-science job)."""
+
+    def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
+        ex = ContainerExecutor(
+            name="container[stream]",
+            entry_points={"stream": stream_lib.analytics_step,
+                          "generic": stream_lib.analytics_step},
+            state={}, mesh=mesh)
+        return ex, ex.footprint_bytes()
+
+    return builder
+
+
+def assemble_edge_system(manager: ConfigurationManager, heavy_cfg,
+                         light_cfg=None, scfg=None,
+                         params_heavy=None, params_light=None):
+    """Register the standard builder set (used by examples + benchmarks)."""
+    scfg = scfg or stream_lib.StreamConfig()
+    registry = manager.registry
+    cb = make_container_builder(heavy_cfg, params=params_heavy)
+    for kind in ("train", "prefill", "decode", "generic"):
+        manager.register_builder(kind, WorkloadClass.HEAVY, cb)
+    if light_cfg is not None:
+        ub = make_unikernel_decode_builder(light_cfg, registry,
+                                           params=params_light)
+        manager.register_builder("decode", WorkloadClass.LIGHT, ub)
+        manager.register_builder("generic", WorkloadClass.LIGHT, ub)
+    manager.register_builder("stream", WorkloadClass.LIGHT,
+                             make_stream_builder(registry, scfg))
+    return manager

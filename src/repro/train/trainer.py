@@ -1,0 +1,148 @@
+"""Training loop: jit'd step + async checkpointing + elastic restart.
+
+The Trainer is deliberately mesh-agnostic: it receives a mesh (1-device test
+mesh or a production pod) and builds the same program the dry-run proved
+compiles.  Failure handling follows DESIGN.md P3/P4:
+
+  * every step is timed through a ``StragglerMonitor`` (slow-step telemetry);
+  * a ``FailureDetector`` poll between steps triggers checkpoint-restart on a
+    shrunk mesh via ``plan_elastic_mesh`` (drivers recreate the Trainer);
+  * checkpoints are atomic + async (one outstanding host write).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpointing import checkpoint as ckpt_lib
+from repro.distributed import sharding as shlib
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.launch import programs
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, tcfg: Optional[programs.TrainConfig] = None,
+                 run_cfg: Optional[TrainerConfig] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tcfg = tcfg or programs.default_train_config(cfg)
+        self.run_cfg = run_cfg or TrainerConfig()
+        self.model = build_model(cfg)
+        self.rules_table = (shlib.multi_pod_rules() if "pod" in mesh.shape
+                            else shlib.single_pod_rules())
+        self.rules = shlib.ShardingRules(mesh, self.rules_table)
+        self.checkpointer = ckpt_lib.AsyncCheckpointer(
+            self.run_cfg.ckpt_dir, keep=self.run_cfg.keep_ckpts)
+        self.straggler = StragglerMonitor()
+        self.step_fn = None
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def _param_shardings(self):
+        abstract = self.model.init_abstract()
+        specs = shlib.param_partition_specs(abstract, self.rules)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def _opt_shardings(self, abstract_opt):
+        abstract = self.model.init_abstract()
+        pspecs = shlib.param_partition_specs(abstract, self.rules)
+        return programs.opt_state_shardings(
+            abstract_opt, pspecs, self.rules, self.tcfg.adamw)
+
+    def initialize(self, restore: bool = True):
+        """Fresh init or restore-from-latest (elastic restart path)."""
+        psh = self._param_shardings()
+        abstract_opt = jax.eval_shape(
+            lambda p: adamw.init_state(p, self.tcfg.adamw),
+            self.model.init_abstract())
+        osh = self._opt_shardings(abstract_opt)
+
+        latest = ckpt_lib.latest_step(self.run_cfg.ckpt_dir) if restore else None
+        if latest is not None:
+            with shlib.use_rules(self.mesh, self.rules_table):
+                tree, extra = ckpt_lib.restore(
+                    self.run_cfg.ckpt_dir, latest,
+                    shardings={"params": psh, "opt": osh})
+            self.params, self.opt_state = tree["params"], tree["opt"]
+            self.step = int(extra.get("step", latest))
+        else:
+            with self.mesh:
+                with shlib.use_rules(self.mesh, self.rules_table):
+                    init = jax.jit(self.model.init, out_shardings=psh)
+                    self.params = init(jax.random.key(self.run_cfg.seed))
+                    opt_init = jax.jit(
+                        lambda p: adamw.init_state(p, self.tcfg.adamw),
+                        out_shardings=osh)
+                    self.opt_state = opt_init(self.params)
+            self.step = 0
+
+        fn = programs.build_train_step(self.cfg, self.tcfg)
+        bspecs = None  # inferred from first batch
+        with shlib.use_rules(self.mesh, self.rules_table):
+            self.step_fn = jax.jit(fn, donate_argnums=(0, 1))
+        return self
+
+    # ------------------------------------------------------------------
+    def _shard_batch(self, batch):
+        def put(x):
+            dims = ("batch",) + (None,) * (x.ndim - 1)
+            spec = self.rules.resolve(dims, x.shape)
+            return jax.device_put(x, NamedSharding(self.mesh, spec))
+        return jax.tree.map(put, batch)
+
+    def train_step(self, batch) -> Dict[str, float]:
+        t0 = time.time()
+        batch = self._shard_batch(batch)
+        with self.mesh:
+            with shlib.use_rules(self.mesh, self.rules_table):
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        self.step += 1
+        dt = time.time() - t0
+        metrics["step_time_s"] = dt
+        metrics["straggler"] = float(self.straggler.record(dt))
+        return metrics
+
+    def maybe_checkpoint(self, force: bool = False):
+        if force or (self.run_cfg.ckpt_every > 0
+                     and self.step % self.run_cfg.ckpt_every == 0):
+            self.checkpointer.save(
+                self.step, {"params": self.params, "opt": self.opt_state},
+                extra_meta={"step": self.step})
+
+    # ------------------------------------------------------------------
+    def fit(self, data_iter: Iterator[Any], num_steps: int,
+            log_fn: Callable[[int, Dict], None] = None) -> Dict[str, list]:
+        history: Dict[str, list] = {"loss": [], "step_time_s": []}
+        for _ in range(num_steps):
+            batch = next(data_iter)
+            metrics = self.train_step(batch)
+            history["loss"].append(metrics.get("loss", float("nan")))
+            history["step_time_s"].append(metrics["step_time_s"])
+            if log_fn and self.step % self.run_cfg.log_every == 0:
+                log_fn(self.step, metrics)
+            self.maybe_checkpoint()
+        self.maybe_checkpoint(force=True)
+        self.checkpointer.wait()
+        return history

@@ -1,0 +1,41 @@
+import dataclasses
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the dry-run sets it in its own process).
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False)
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; use --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def exact_config():
+    """Reduced config tuned for exact-consistency tests: fp32 compute and
+    no-drop MoE capacity (routing-drop differences are not bugs)."""
+    from repro.configs import get_reduced_config
+
+    def make(arch, **over):
+        cfg = get_reduced_config(arch)
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(
+                    cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        return dataclasses.replace(cfg, **over)
+
+    return make

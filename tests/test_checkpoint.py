@@ -1,0 +1,64 @@
+"""Checkpoint atomicity / roundtrip / async / gc tests."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import checkpoint as ck
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "emb": jnp.ones((5, 2), jnp.bfloat16) * 1.5},
+        "opt": {"step": jnp.asarray(7, jnp.int32),
+                "m": [jnp.zeros((3,)), jnp.full((2, 2), -2.0)]},
+    }
+
+
+def test_roundtrip_preserves_dtypes_and_values(tmp_path):
+    tree = _tree()
+    ck.save(str(tmp_path), 3, tree, extra_meta={"step": 3})
+    got, extra = ck.restore(str(tmp_path))
+    assert extra["step"] == 3
+    flat_w, _ = jax.tree_util.tree_flatten(tree)
+    flat_g, _ = jax.tree_util.tree_flatten(got)
+    for w, g in zip(flat_w, flat_g):
+        assert np.asarray(w).dtype == np.asarray(g).dtype
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    tree = _tree()
+    ck.save(str(tmp_path), 1, tree)
+    ck.save(str(tmp_path), 2, tree)
+    os.remove(str(tmp_path / "step_000000002.COMMIT"))   # simulate crash
+    assert ck.latest_step(str(tmp_path)) == 1
+    got, _ = ck.restore(str(tmp_path))
+    assert got is not None
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    acp = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        acp.save(s, {"x": jnp.full((4,), float(s))}, {"step": s})
+    acp.wait()
+    acp.gc()
+    assert ck.committed_steps(str(tmp_path)) == [3, 4]
+    got, extra = ck.restore(str(tmp_path))
+    assert extra["step"] == 4
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.full((4,), 4.0))
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), target_tree={"b": {"c": 1}})
+
+
+def test_restore_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "nope"))

@@ -1,0 +1,64 @@
+"""Failure detection, elastic re-mesh planning, straggler monitoring."""
+import pytest
+
+from repro.distributed.fault_tolerance import (ElasticPlan, FailureDetector,
+                                               StragglerMonitor,
+                                               plan_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_failure_detector_marks_and_recovers():
+    clock = FakeClock()
+    fd = FailureDetector(["h0", "h1"], timeout=5.0, clock=clock)
+    events = []
+    fd.on_change(lambda h, ok: events.append((h, ok)))
+
+    clock.t = 3.0
+    fd.heartbeat("h0")
+    clock.t = 6.0
+    failed = fd.poll()
+    assert failed == ["h1"]                    # h1 silent for 6s > 5s
+    assert fd.healthy_hosts() == ["h0"]
+    clock.t = 7.0
+    fd.heartbeat("h1")                         # rejoin
+    assert fd.healthy_hosts() == ["h0", "h1"]
+    assert events == [("h1", False), ("h1", True)]
+    assert fd.hosts["h1"].incarnation == 1
+
+
+def test_elastic_plan_shrinks_data_axis_pow2():
+    # 64 hosts × 4 chips = 256 chips = 16×16 single pod
+    plan = plan_elastic_mesh(total_hosts=64, failed_hosts=3,
+                             chips_per_host=4, base_mesh=(16, 16))
+    assert plan.model_axis == 16               # never broken
+    assert plan.data_axis == 8                 # 13 rows → pow2 floor 8
+    assert plan.global_batch_scale == 0.5
+
+
+def test_elastic_plan_multipod():
+    plan = plan_elastic_mesh(total_hosts=128, failed_hosts=1,
+                             chips_per_host=4, base_mesh=(16, 16), pods=2)
+    assert plan.model_axis == 16
+    assert plan.data_axis * plan.pods == 16    # 31 rows → 16
+    assert plan.global_batch_scale == 0.5
+
+
+def test_elastic_plan_no_survivors_raises():
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(total_hosts=4, failed_hosts=4, chips_per_host=64,
+                          base_mesh=(16, 16))
+
+
+def test_straggler_monitor():
+    sm = StragglerMonitor(window=10, threshold=2.0)
+    flags = [sm.record(1.0) for _ in range(8)]
+    assert not any(flags)
+    assert sm.record(3.0) is True              # 3× median
+    assert sm.record(1.1) is False

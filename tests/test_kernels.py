@@ -1,0 +1,272 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.rmsnorm import rmsnorm
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 3.5e-2
+
+
+def _rel_err(want, got):
+    w = np.asarray(want, np.float32)
+    g = np.asarray(got, np.float32)
+    return np.max(np.abs(w - g)) / max(np.max(np.abs(w)), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Tq, Tk, Hq, Hkv, D, causal, window, softcap, valid
+    (2, 64, 64, 4, 2, 32, True, 0, 0.0, False),
+    (1, 100, 100, 4, 4, 64, True, 0, 0.0, False),
+    (2, 64, 64, 8, 1, 32, True, 0, 0.0, False),      # MQA
+    (2, 64, 64, 4, 2, 32, True, 16, 0.0, False),     # sliding window
+    (2, 64, 64, 4, 2, 32, True, 0, 20.0, False),     # logit softcap
+    (2, 64, 64, 4, 2, 32, True, 0, 0.0, True),       # kv_valid_len
+    (2, 64, 64, 4, 2, 32, False, 0, 0.0, False),     # bidirectional
+    (2, 48, 96, 4, 2, 32, True, 0, 0.0, False),      # cross lengths
+    (1, 32, 32, 2, 2, 128, True, 0, 0.0, False),     # MXU-aligned head
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, Tq, Tk, Hq, Hkv, D, causal, window, softcap, valid = case
+    ks = jax.random.split(jax.random.key(B * 131 + Tq), 4)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, D), dtype)
+    kv_valid = (jax.random.randint(ks[3], (B,), 1, Tk + 1)
+                if valid else None)
+    want = ref.mha(q, k, v, causal=causal, window=window, softcap=softcap,
+                   kv_valid_len=kv_valid)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, kv_valid_len=kv_valid,
+                          interpret=True, block_q=32, block_k=32)
+    assert _rel_err(want, got) < _tol(dtype)
+
+
+def test_flash_attention_block_size_invariance():
+    q = jax.random.normal(jax.random.key(0), (1, 64, 4, 32))
+    k = jax.random.normal(jax.random.key(1), (1, 64, 2, 32))
+    v = jax.random.normal(jax.random.key(2), (1, 64, 2, 32))
+    outs = [flash_attention(q, k, v, interpret=True, block_q=bq, block_k=bk)
+            for bq, bk in [(16, 16), (32, 64), (64, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 128, 4, 2, 32, 0),
+    (2, 100, 8, 1, 64, 0),
+    (1, 256, 4, 4, 32, 32),       # windowed
+    (3, 64, 16, 2, 128, 0),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_vs_ref(case, dtype):
+    B, S, Hq, Hkv, D, win = case
+    ks = jax.random.split(jax.random.key(S * 7 + Hq), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    clen = jax.random.randint(ks[3], (B,), 1, S + 1)
+    want = ref.decode_attention(q, k, v, clen, window=win)
+    got = decode_attention(q, k, v, clen, window=win, interpret=True,
+                           block_k=32)
+    assert _rel_err(want, got) < _tol(dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, T, H, G, P, N, chunk, with_init
+    (2, 64, 4, 1, 16, 8, 16, False),
+    (1, 100, 4, 2, 32, 16, 32, False),    # ragged T, grouped B/C
+    (2, 64, 4, 1, 16, 8, 16, True),       # initial state (prefill→decode)
+    (1, 128, 8, 1, 64, 16, 64, False),    # mamba-like dims
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_vs_ref(case):
+    B, T, H, G, P, N, chunk, init = case
+    ks = jax.random.split(jax.random.key(T * 13 + H), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, T, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (B, T, G, N)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.2 if init else None
+    want, wfin = ref.ssd_scan(x, dt, A, B_, C, chunk=chunk,
+                              initial_state=s0, return_final_state=True)
+    got, gfin = ssd_scan(x, dt, A, B_, C, chunk=chunk, initial_state=s0,
+                         return_final_state=True, interpret=True)
+    assert _rel_err(want, got) < 1e-4
+    assert _rel_err(wfin, gfin) < 1e-4
+
+
+def test_ssd_chunk_invariance():
+    """SSD result must not depend on the chunk size (algebraic identity)."""
+    ks = jax.random.split(jax.random.key(5), 5)
+    B, T, H, G, P, N = 1, 96, 2, 1, 8, 4
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, T, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (B, T, G, N)) * 0.3
+    outs = [ref.ssd_scan(x, dt, A, B_, C, chunk=c) for c in (8, 16, 48, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step recurrence (the actual SSM definition)."""
+    ks = jax.random.split(jax.random.key(9), 5)
+    B, T, H, G, P, N = 1, 32, 2, 1, 4, 4
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, T, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (B, T, G, N)) * 0.3
+    got = ref.ssd_scan(x, dt, A, B_, C, chunk=8)
+    state = jnp.zeros((B, H, P, N))
+    outs = []
+    for t in range(T):
+        y, state = ref.ssd_decode_step(x[:, t], dt[:, t], A, B_[:, t],
+                                       C[:, t], state)
+        outs.append(y)
+    want = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 37, 256), (2, 128), (1, 8, 8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_ref(shape, dtype):
+    x = jax.random.normal(jax.random.key(1), shape, dtype)
+    sc = jnp.asarray(np.linspace(0.5, 1.5, shape[-1]), jnp.float32)
+    want = ref.rmsnorm(x, sc)
+    got = rmsnorm(x, sc, interpret=True, block_rows=16)
+    assert _rel_err(want, got) < _tol(dtype)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_modes():
+    q = jax.random.normal(jax.random.key(0), (1, 32, 2, 16))
+    k = jax.random.normal(jax.random.key(1), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.key(2), (1, 32, 2, 16))
+    a = ops.flash_attention(q, k, v, impl="ref")
+    b = ops.flash_attention(q, k, v, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+    ops.set_impl("interpret")
+    try:
+        c = ops.flash_attention(q, k, v)
+    finally:
+        ops.set_impl(None)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-6,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-semantics) attention — values AND gradients vs naive ref
+# ---------------------------------------------------------------------------
+
+BLOCKED_CASES = [
+    (2, 32, 32, 4, 2, 16, True, 0, 0.0),
+    (2, 32, 32, 8, 1, 16, True, 0, 0.0),
+    (2, 32, 32, 4, 2, 16, True, 8, 0.0),
+    (2, 32, 32, 4, 2, 16, True, 0, 15.0),
+    (2, 24, 40, 4, 2, 16, True, 0, 0.0),
+    (2, 32, 32, 4, 2, 16, False, 0, 0.0),
+]
+
+
+@pytest.mark.parametrize("case", BLOCKED_CASES)
+def test_blocked_attention_values_and_grads(case):
+    from repro.kernels.blocked_attention import mha_blocked
+    B, Tq, Tk, Hq, Hkv, D, causal, window, softcap = case
+    ks = jax.random.split(jax.random.key(Tq * 5 + Hq), 3)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, D))
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, D))
+
+    def loss_of(fn):
+        return lambda q, k, v: jnp.sum(jnp.cos(fn(q, k, v)))
+
+    f_ref = loss_of(lambda q, k, v: ref.mha(
+        q, k, v, causal=causal, window=window, softcap=softcap))
+    f_blk = loss_of(lambda q, k, v: mha_blocked(
+        q, k, v, causal=causal, window=window, softcap=softcap, block_k=16))
+    o_ref = ref.mha(q, k, v, causal=causal, window=window, softcap=softcap)
+    o_blk = mha_blocked(q, k, v, causal=causal, window=window,
+                        softcap=softcap, block_k=16)
+    assert _rel_err(o_ref, o_blk) < 2e-5
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_blk = jax.grad(f_blk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_blk):
+        assert _rel_err(a, b) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash attention backward (integrated custom_vjp, interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    (2, 32, 32, 4, 2, 16, True, 0, 0.0),
+    (2, 32, 32, 8, 1, 16, True, 0, 0.0),     # MQA group-summed dk/dv
+    (2, 32, 32, 4, 2, 16, True, 8, 0.0),     # sliding window
+    (2, 32, 32, 4, 2, 16, True, 0, 12.0),    # softcap derivative
+    (2, 24, 40, 4, 2, 16, True, 0, 0.0),     # ragged cross lengths
+    (2, 32, 32, 4, 2, 16, False, 0, 0.0),
+])
+def test_flash_mha_pallas_bwd(case):
+    from repro.kernels.flash_attention_bwd import flash_mha
+    B, Tq, Tk, Hq, Hkv, D, causal, window, softcap = case
+    ks = jax.random.split(jax.random.key(Tq + Hq), 3)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, D))
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, D))
+
+    f_ref = lambda q, k, v: jnp.sum(jnp.cos(ref.mha(
+        q, k, v, causal=causal, window=window, softcap=softcap)))
+    f_pl = lambda q, k, v: jnp.sum(jnp.cos(flash_mha(
+        q, k, v, causal, window, softcap, 16, 16, True)))
+    assert _rel_err(ref.mha(q, k, v, causal=causal, window=window,
+                            softcap=softcap),
+                    flash_mha(q, k, v, causal, window, softcap, 16, 16,
+                              True)) < 2e-5
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_pl = jax.grad(f_pl, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_pl):
+        assert _rel_err(a, b) < 2e-4

@@ -1,0 +1,123 @@
+"""Optimizer + gradient-utility tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, grad as gradlib, schedule
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(ks[0], (8, 16)),
+        "b": jax.random.normal(ks[1], (16,)),
+        "nested": {"m": jax.random.normal(ks[2], (4, 4, 4))},
+    }
+
+
+def test_adamw_matches_reference_step():
+    cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, grad_clip_norm=0.0)
+    params = _tree(jax.random.key(0))
+    grads = _tree(jax.random.key(1))
+    state = adamw.init_state(params, cfg)
+    new_p, new_s, _ = adamw.apply_updates(params, grads, state, cfg)
+    # reference: bias-corrected adam, step 1 → update = lr * g/(|g|+eps)
+    for k in ("w", "b"):
+        g = np.asarray(grads[k])
+        want = np.asarray(params[k]) - cfg.lr * g / (np.abs(g) + cfg.eps)
+        np.testing.assert_allclose(np.asarray(new_p[k]), want, rtol=1e-5)
+    assert int(new_s["step"]) == 1
+
+
+def test_adamw_weight_decay_only_matrices():
+    cfg = adamw.AdamWConfig(lr=1e-2, weight_decay=0.5, grad_clip_norm=0.0)
+    params = _tree(jax.random.key(0))
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = adamw.init_state(params, cfg)
+    new_p, _, _ = adamw.apply_updates(params, zeros, state, cfg)
+    # 1-D params: no decay, zero grad → unchanged
+    np.testing.assert_allclose(np.asarray(new_p["b"]),
+                               np.asarray(params["b"]), rtol=1e-6)
+    # matrices decay toward zero
+    assert np.all(np.abs(np.asarray(new_p["w"]))
+                  < np.abs(np.asarray(params["w"])) + 1e-9)
+
+
+def test_grad_clipping():
+    cfg = adamw.AdamWConfig(grad_clip_norm=1.0)
+    g = {"w": jnp.full((100,), 10.0)}
+    assert float(adamw.global_norm(g)) > 1.0
+    state = adamw.init_state(g, cfg)
+    _, _, metrics = adamw.apply_updates(g, g, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(100.0, rel=1e-3)
+
+
+def test_int8_state_quantization_bounded_error():
+    cfg = adamw.AdamWConfig(state_dtype="int8", quant_block=64)
+    x = jax.random.normal(jax.random.key(2), (1024,)) * 3.0
+    qm = adamw._quantize(x, cfg.quant_block)
+    deq = adamw._dequantize(qm, x.shape)
+    blocks = np.abs(np.asarray(x)).reshape(-1, 64).max(axis=1)
+    bound = np.repeat(blocks / 127.0, 64)[: x.size] * 0.5 + 1e-9
+    assert np.all(np.abs(np.asarray(deq) - np.asarray(x)) <= bound + 1e-6)
+
+
+def test_int8_adamw_trains_similarly():
+    """8-bit and fp32 AdamW should produce nearby params over a few steps."""
+    p0 = {"w": jax.random.normal(jax.random.key(0), (64, 64)) * 0.1}
+    gs = [jax.tree.map(lambda x: jax.random.normal(jax.random.key(i), x.shape)
+                       * 0.01, p0) for i in range(5)]
+    outs = {}
+    for dtype in ("float32", "int8"):
+        cfg = adamw.AdamWConfig(lr=1e-3, state_dtype=dtype,
+                                weight_decay=0.0, grad_clip_norm=0.0)
+        p = p0
+        s = adamw.init_state(p, cfg)
+        for g in gs:
+            p, s, _ = adamw.apply_updates(p, g, s, cfg)
+        outs[dtype] = np.asarray(p["w"])
+    drift = np.max(np.abs(outs["float32"] - outs["int8"]))
+    assert drift < 5e-4, drift
+
+
+def test_schedule_warmup_and_decay():
+    cfg = schedule.ScheduleConfig(warmup_steps=10, decay_steps=100,
+                                  min_ratio=0.1)
+    assert float(schedule.lr_multiplier(0, cfg)) == 0.0
+    assert float(schedule.lr_multiplier(10, cfg)) == pytest.approx(1.0)
+    assert float(schedule.lr_multiplier(100, cfg)) == pytest.approx(0.1)
+    mids = [float(schedule.lr_multiplier(s, cfg)) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-9 for a, b in zip(mids, mids[1:]))  # monotone
+
+
+def test_grad_accumulation_matches_big_batch():
+    def loss_fn(p, batch):
+        pred = batch["x"] @ p["w"]
+        l = jnp.mean(jnp.square(pred - batch["y"]))
+        return l, {"loss": l}
+
+    p = {"w": jax.random.normal(jax.random.key(0), (8, 4))}
+    batch = {"x": jax.random.normal(jax.random.key(1), (16, 8)),
+             "y": jax.random.normal(jax.random.key(2), (16, 4))}
+    (_, _), g1 = gradlib.accumulate_grads(loss_fn, p, batch, 1)
+    (_, _), g4 = gradlib.accumulate_grads(loss_fn, p, batch, 4)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_compression_error_feedback_reduces_bias():
+    g = {"w": jax.random.normal(jax.random.key(3), (4096,)) * 0.01}
+    deq1, res = gradlib.compress_decompress(g, block=256)
+    # single-shot error is bounded by block max / 127
+    err = np.abs(np.asarray(deq1["w"]) - np.asarray(g["w"]))
+    assert err.max() < np.abs(np.asarray(g["w"])).max() / 127.0 + 1e-9
+    # error feedback: the residual carries the lost mass forward
+    deq2, res2 = gradlib.compress_decompress(g, block=256, residual=res)
+    total_sent = np.asarray(deq1["w"]) + np.asarray(deq2["w"])
+    total_true = 2 * np.asarray(g["w"])
+    rem = np.asarray(res2["w"])
+    np.testing.assert_allclose(total_sent + rem, total_true, rtol=1e-5,
+                               atol=1e-7)

@@ -1,0 +1,153 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
+                                 WorkloadKind, classify)
+from repro.distributed.fault_tolerance import plan_elastic_mesh
+from repro.distributed.sharding import ShardingRules, single_pod_rules
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig, MoEConfig
+from repro.optim import adamw
+
+SETTINGS = settings(max_examples=60, deadline=None)
+
+
+# ------------------------------------------------------------- classifier
+@SETTINGS
+@given(f1=st.floats(1e3, 1e15), f2=st.floats(1e3, 1e15),
+       b=st.floats(1e3, 1e12),
+       kind=st.sampled_from([WorkloadKind.DECODE, WorkloadKind.GENERIC,
+                             WorkloadKind.PREFILL]))
+def test_classifier_monotone_in_flops(f1, f2, b, kind):
+    """More FLOPs can never flip HEAVY → LIGHT."""
+    lo, hi = sorted((f1, f2))
+    w_lo = Workload("w", kind, est_flops=lo, est_bytes=b)
+    w_hi = Workload("w", kind, est_flops=hi, est_bytes=b)
+    if classify(w_lo) == WorkloadClass.HEAVY:
+        assert classify(w_hi) == WorkloadClass.HEAVY
+
+
+@SETTINGS
+@given(st.floats(0, 1e18))
+def test_stream_always_light(f):
+    w = Workload("s", WorkloadKind.STREAM, est_flops=f, est_bytes=f)
+    assert classify(w) == WorkloadClass.LIGHT
+
+
+# ------------------------------------------------------------ elastic plan
+@SETTINGS
+@given(hosts=st.integers(2, 256), failed=st.integers(0, 255))
+def test_elastic_plan_invariants(hosts, failed):
+    if failed >= hosts:
+        return
+    chips_per_host = max(1, 256 // hosts)
+    if hosts * chips_per_host != 256:
+        return
+    try:
+        plan = plan_elastic_mesh(hosts, failed, chips_per_host, (16, 16))
+    except RuntimeError:
+        # legitimate: with >16 hosts a failure set can wipe every
+        # data-parallel row — restart must wait for replacements
+        assert failed * max(1, 16 // hosts) >= 16
+        return
+    rows = plan.data_axis * plan.pods
+    assert plan.model_axis == 16
+    assert rows & (rows - 1) == 0                      # power of two
+    surviving = 16 - failed * max(1, 16 // hosts)
+    assert rows <= max(surviving, 1)                   # never oversubscribe
+    assert 0 < plan.global_batch_scale <= 1.0
+
+
+# ----------------------------------------------------------- sharding rules
+@SETTINGS
+@given(dims=st.lists(st.sampled_from(
+    [None, "batch", "heads", "ffn", "vocab", "fsdp"]), min_size=1,
+    max_size=4),
+    shape=st.lists(st.integers(1, 64), min_size=4, max_size=4))
+def test_resolver_divisibility_safe(dims, shape):
+    """Resolved specs never shard a dim that isn't divisible."""
+    import jax as _jax
+    if len(_jax.devices()) != 1:
+        return
+    mesh = _jax.make_mesh((1, 1), ("data", "model"),
+                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    rules = ShardingRules(mesh, single_pod_rules())
+    spec = rules.resolve(dims, shape[: len(dims)])
+    for i, entry in enumerate(spec):
+        if entry is not None:
+            size = rules.mesh_axis_size(entry)
+            assert shape[i] % size == 0
+
+
+# -------------------------------------------------------------- int8 quant
+@SETTINGS
+@given(st.integers(1, 2000), st.floats(1e-4, 1e4))
+def test_quantize_roundtrip_bounded(n, scale):
+    x = np.asarray(
+        np.random.default_rng(n).normal(size=n) * scale, np.float32)
+    qm = adamw._quantize(jnp.asarray(x), 256)
+    deq = np.asarray(adamw._dequantize(qm, x.shape))
+    pad = (-n) % 256
+    blocks = np.abs(np.pad(x, (0, pad))).reshape(-1, 256).max(axis=1)
+    bound = np.repeat(blocks, 256)[:n] / 127.0 * 0.5 + 1e-9
+    assert np.all(np.abs(deq - x) <= bound * 1.01 + 1e-7)
+
+
+# ------------------------------------------------------------ moe dispatch
+@SETTINGS
+@given(n_tok=st.integers(4, 48), E=st.sampled_from([2, 4, 8]),
+       k=st.integers(1, 2), seed=st.integers(0, 10 ** 6))
+def test_moe_dispatch_combine_is_weighted_identity(n_tok, E, k, seed):
+    """With identity experts (y=x via FFN replaced), combine(dispatch(x))
+    returns gate-weighted x for every non-dropped pair."""
+    cfg = ModelConfig(
+        name="t", family="moe", d_model=8, num_heads=1, num_kv_heads=1,
+        vocab_size=8,
+        moe=MoEConfig(num_experts=E, top_k=k, d_expert=8,
+                      capacity_factor=float(E)))
+    key = jax.random.key(seed)
+    xt = jax.random.normal(key, (n_tok, cfg.d_model))
+    logits = jax.random.normal(jax.random.key(seed + 1), (n_tok, E))
+    gate, idx = moe_lib.router_topk(logits, k)
+    cap = moe_lib._capacity(n_tok, cfg)
+    buf, meta = moe_lib._dispatch(xt, gate, idx, cap, cfg)
+    out = moe_lib._combine(buf, meta, n_tok, xt.dtype)
+    want = np.asarray(xt) * np.asarray(gate.sum(-1))[:, None]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-3, atol=2e-4)
+
+
+# ----------------------------------------------------------- ring cache
+@SETTINGS
+@given(window=st.integers(1, 32), pos=st.integers(0, 500))
+def test_ring_slot_math(window, pos):
+    from repro.models.attention import _ring_slots
+    slot = int(_ring_slots(jnp.asarray(pos), window))
+    assert 0 <= slot < window
+    assert slot == pos % window
+
+
+# --------------------------------------------------------- checkpoint trees
+@SETTINGS
+@given(st.integers(0, 10 ** 6))
+def test_checkpoint_roundtrip_random_trees(seed):
+    import tempfile
+    from repro.checkpointing import checkpoint as ck
+    rng = np.random.default_rng(seed)
+    dtypes = [np.float32, np.int32, np.float16]
+    tree = {
+        f"k{i}": rng.normal(size=rng.integers(1, 20)).astype(
+            dtypes[rng.integers(0, len(dtypes))])
+        for i in range(rng.integers(1, 5))
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 0, tree)
+        got, _ = ck.restore(d)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], np.asarray(got[k]))
+        assert tree[k].dtype == np.asarray(got[k]).dtype

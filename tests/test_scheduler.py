@@ -1,0 +1,39 @@
+"""Speculative backup execution + work queue."""
+import time
+
+from repro.core.scheduler import SpeculativeRunner, WorkQueue
+
+
+def test_no_backup_without_history():
+    r = SpeculativeRunner(min_history=5)
+    out = r.run(lambda: 42, backup=lambda: -1)
+    assert out.value == 42 and not out.backup_launched
+
+
+def test_backup_wins_when_primary_straggles():
+    r = SpeculativeRunner(threshold=2.0, min_history=3)
+    for _ in range(5):
+        r.run(lambda: time.sleep(0.01) or "fast")
+    out = r.run(lambda: time.sleep(1.0) or "slow",
+                backup=lambda: "backup")
+    assert out.backup_launched
+    assert out.value == "backup"
+    assert out.wall_s < 0.9
+
+
+def test_primary_wins_when_fast():
+    r = SpeculativeRunner(threshold=5.0, min_history=3)
+    for _ in range(5):
+        r.run(lambda: time.sleep(0.005) or "x")
+    out = r.run(lambda: "quick", backup=lambda: time.sleep(2) or "b")
+    assert out.value == "quick" and out.winner == "primary"
+
+
+def test_work_queue_depth():
+    q = WorkQueue()
+    for i in range(5):
+        q.put(i)
+    assert q.depth() == 5
+    assert q.get() == 0
+    assert q.depth() == 4
+    assert q.enqueued == 5 and q.dequeued == 1
