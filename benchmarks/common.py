@@ -9,14 +9,33 @@ import jax
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10
               ) -> Tuple[float, object]:
+    walls, out = time_samples(fn, *args, warmup=warmup, iters=iters)
+    return sum(walls) / len(walls) * 1e6, out    # microseconds per call
+
+
+def time_samples(fn: Callable, *args, warmup: int = 2, iters: int = 10
+                 ) -> Tuple[list, object]:
+    """Per-iteration wall seconds — feed these into ``DispatchStats`` for
+    percentile reporting alongside the mean the CSV carries."""
     out = None
     for _ in range(warmup):
         out = jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    walls = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = jax.block_until_ready(fn(*args))
-    dt = (time.perf_counter() - t0) / iters
-    return dt * 1e6, out          # microseconds per call
+        walls.append(time.perf_counter() - t0)
+    return walls, out
+
+
+def stats_suffix(stats, wclass: str = "heavy") -> str:
+    """Render a DispatchStats class summary as CSV derived-column text."""
+    s = stats.summary()[wclass]
+    if not s:
+        return "p50_us=n/a"
+    return (f"p50_us={s['p50_wall_s'] * 1e6:.1f};"
+            f"p95_us={s['p95_wall_s'] * 1e6:.1f};"
+            f"p99_us={s['p99_wall_s'] * 1e6:.1f}")
 
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:

@@ -18,8 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_line, time_call
-from repro.core import (ContainerExecutor, ExecutableImage,
+from benchmarks.common import csv_line, stats_suffix, time_samples
+from repro.core import (ContainerExecutor, DispatchStats, ExecutableImage,
                         UnikernelExecutor, Workload, WorkloadKind)
 from repro.data import stream as stream_lib
 
@@ -47,9 +47,15 @@ def run() -> list[str]:
         fns[n] = comp
     rec = {k: jnp.asarray(v) for k, v in
            next(stream_lib.make_record_stream(scfg)).items()}
-    us_c, _ = time_call(lambda: fns[256](state32, rec), iters=20)
+    walls_c, _ = time_samples(lambda: fns[256](state32, rec), iters=20)
+    stats_c = DispatchStats.from_walls("fig5/container", walls_c,
+                                       workload_class="light",
+                                       executor_class="container",
+                                       footprint_bytes=footprint_c)
+    us_c = sum(walls_c) / len(walls_c) * 1e6
     rows.append(csv_line("fig5/container", us_c,
-                         f"footprint={footprint_c}"))
+                         f"footprint={footprint_c};"
+                         f"{stats_suffix(stats_c, 'light')}"))
 
     # ---------------- unikernel-class: one donated bf16 image
     state16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
@@ -69,12 +75,18 @@ def run() -> list[str]:
     def once():
         cur["state"], out = ex.dispatch(w, (cur["state"], rec))
         return out
-    us_u, _ = time_call(once, iters=20)
+    walls_u, _ = time_samples(once, iters=20)
     footprint_u = img.footprint_bytes + img.output_bytes
+    stats_u = DispatchStats.from_walls("fig5/unikernel", walls_u,
+                                       workload_class="light",
+                                       executor_class="unikernel",
+                                       footprint_bytes=footprint_u)
+    us_u = sum(walls_u) / len(walls_u) * 1e6
     saving = 100.0 * (1.0 - footprint_u / footprint_c)
     rows.append(csv_line("fig5/unikernel", us_u,
                          f"footprint={footprint_u};saving_pct={saving:.1f};"
-                         f"paper_saving_pct={PAPER_SAVING}"))
+                         f"paper_saving_pct={PAPER_SAVING};"
+                         f"{stats_suffix(stats_u, 'light')}"))
     return rows
 
 

@@ -2,60 +2,80 @@
 
 The paper deploys 16 CV-app instances across 4 worker nodes (manager on a
 5th) and shows the orchestrator balancing load and redistributing when a
-node is overloaded.  Analogue: 16 container-class instances over 4 nodes
-under each placement policy (≙ Swarm / K3s / Nomad), then a node failure →
-failover; we report per-node instance counts, HBM balance (stddev), and
-redeploy latency.
+node is overloaded.  Analogue: ONE declarative ``ServiceSpec`` (16
+replicas) applied to an ``EdgeSystem`` under each placement policy
+(≙ Swarm / K3s / Nomad), then a node failure → failover redeploys from
+the stored spec; we report per-node instance counts, HBM balance
+(stddev), redeploy latency, and dispatch percentiles from the system's
+``DispatchStats``.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
+import jax.numpy as jnp
 
-from benchmarks.common import csv_line
-from repro.core import (ContainerExecutor, NodeCapacity, Orchestrator,
-                        POLICIES)
+from benchmarks.common import csv_line, stats_suffix
+from repro.core import (ContainerExecutor, EdgeSystem, ExecutorClass,
+                        POLICIES, ServiceSpec, Workload, WorkloadClass,
+                        WorkloadKind)
+
+import numpy as np
 
 N_NODES = 4
 N_INSTANCES = 16
 FOOTPRINT = 10 * 2 ** 20          # 10 MiB per instance
 
 
-def _factory(mesh):
-    return ContainerExecutor("cv-app", {"generic": lambda x: x})
+def _builder(workload, mesh):
+    ex = ContainerExecutor("cv-app", {"generic": lambda x: x}, mesh=mesh)
+    return ex, FOOTPRINT
 
 
 def run() -> list[str]:
     rows = []
     for pname, pcls in POLICIES.items():
-        orch = Orchestrator(policy=pcls())
+        system = EdgeSystem(policy=pcls())
         for i in range(N_NODES):
-            orch.add_node(f"worker{i}",
-                          NodeCapacity.for_chips(1))
+            system.add_node(f"worker{i}")
+        system.register_builder("generic", WorkloadClass.HEAVY, _builder)
+
+        spec = ServiceSpec(
+            name="cv",
+            workload=Workload("cv-app", WorkloadKind.GENERIC),
+            executor_class=ExecutorClass.CONTAINER,
+            replicas=N_INSTANCES,
+            footprint_hint=FOOTPRINT)
         t0 = time.perf_counter()
-        for i in range(N_INSTANCES):
-            orch.deploy(f"cv{i}", _factory, FOOTPRINT)
+        system.apply(spec)
         deploy_us = (time.perf_counter() - t0) / N_INSTANCES * 1e6
 
-        counts = {n: 0 for n in orch.nodes}
-        for d in orch.deployments.values():
+        counts = {n: 0 for n in system.orchestrator.nodes}
+        for d in system.orchestrator.deployments.values():
             counts[d.node_id] += 1
         load = np.array(list(counts.values()), float)
 
-        # node failure → redeploy (paper: redistribute under overload)
+        # spread some dispatches across the replica set (least-inflight)
+        x = jnp.zeros((4,), jnp.float32)
+        system.submit_many(
+            [(Workload(f"frame{i}", WorkloadKind.GENERIC,
+                       est_flops=1e10), (x,)) for i in range(32)],
+            speculative=False)
+
+        # node failure → redeploy from the stored spec (paper: redistribute)
         t1 = time.perf_counter()
-        moved = orch.on_node_failure("worker0")
+        moved = system.orchestrator.on_node_failure("worker0")
         failover_us = (time.perf_counter() - t1) * 1e6
         counts2 = {}
-        for d in orch.deployments.values():
+        for d in system.orchestrator.deployments.values():
             counts2[d.node_id] = counts2.get(d.node_id, 0) + 1
         assert sum(counts2.values()) == N_INSTANCES
         rows.append(csv_line(
             f"fig7/{pname}", deploy_us,
             f"load_per_node={'/'.join(str(int(c)) for c in load)};"
             f"stddev={load.std():.2f};moved={len(moved)};"
-            f"failover_us={failover_us:.0f}"))
+            f"failover_us={failover_us:.0f};"
+            f"{stats_suffix(system.stats, 'heavy')}"))
     return rows
 
 

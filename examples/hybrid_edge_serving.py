@@ -1,11 +1,14 @@
 """The paper's system, end to end (fig 1/2): a mixed IoT workload stream —
 "images" (heavy inference) and sensor records (light analytics) — flows
-through the configuration manager, which classifies each task
-(application-aware), places it on a node with headroom (resource-aware,
-orchestrator policy), and runs it on the right executor class:
-container-class for the heavy model, unikernel-class AOT image for the
-stream task.  Mid-run, a node fails; the orchestrator redeploys and the
-stream continues.
+through the edge system, which classifies each task (application-aware),
+places it on a node with headroom (resource-aware, orchestrator policy),
+and runs it on the right executor class: container-class for the heavy
+model, unikernel-class AOT image for the stream task.
+
+Everything is declared up front as ``ServiceSpec`` manifests applied to an
+``EdgeSystem`` facade — operators state WHAT to run (replicas, class,
+SLO); the runtime decides WHERE.  Mid-run, a node fails; the orchestrator
+redeploys from the stored specs and the stream continues.
 
     PYTHONPATH=src python examples/hybrid_edge_serving.py
 """
@@ -13,36 +16,39 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.core import (ConfigurationManager, LeastLoadedPolicy, NodeCapacity,
-                        Orchestrator, Workload, WorkloadKind)
+from repro.core import (EdgeSystem, LeastLoadedPolicy, Workload,
+                        WorkloadKind)
 from repro.data import stream as stream_lib
-from repro.models.model import build_model
 from repro.serving import router
 
 
 def main():
     # ---- edge cluster: 1 manager + 4 workers (paper §III-D)
-    orch = Orchestrator(policy=LeastLoadedPolicy())
+    system = EdgeSystem(policy=LeastLoadedPolicy())
     for i in range(4):
-        orch.add_node(f"worker{i}", NodeCapacity.for_chips(1))
-    mgr = ConfigurationManager(orch)
+        system.add_node(f"worker{i}")
 
     heavy_cfg = get_reduced_config("edge-cv-heavy")
     light_cfg = get_reduced_config("edge-stream-light")
     scfg = stream_lib.StreamConfig(num_users=16, batch_records=32)
-    router.assemble_edge_system(mgr, heavy_cfg=heavy_cfg,
+    router.assemble_edge_system(system, heavy_cfg=heavy_cfg,
                                 light_cfg=light_cfg, scfg=scfg)
+
+    # ---- declare the standing services: 2 CV replicas, 2 stream replicas
+    for spec in router.standard_specs(heavy_cfg, replicas_heavy=2,
+                                      replicas_stream=2):
+        deps = system.apply(spec)
+        print(f"applied {spec.name} x{spec.replicas} -> "
+              f"{[d.node_id for d in deps]}")
 
     # ---- mixed workload stream
     rng = np.random.default_rng(0)
     records = stream_lib.make_record_stream(scfg)
     state = stream_lib.init_state(scfg)
-    heavy_model = build_model(heavy_cfg)
 
     for i in range(6):
         # "image" arrives → heavy (container-class)
@@ -51,7 +57,7 @@ def main():
         w = Workload(f"frame{i}", WorkloadKind.GENERIC, heavy_cfg,
                      batch=1, seq_len=32,
                      est_flops=2.0 * heavy_cfg.num_params() * 32 * 300)
-        res = mgr.submit(w, (feats,))
+        res = system.submit(w, (feats,))
         print(f"[{w.name}] -> {res.workload_class.value:5s} on "
               f"{res.node_id} via {res.executor_name} "
               f"({res.wall_s * 1e3:.1f} ms)")
@@ -59,7 +65,7 @@ def main():
         # sensor records arrive → light (unikernel-class)
         rec = {k: jnp.asarray(v) for k, v in next(records).items()}
         w2 = Workload(f"sensor{i}", WorkloadKind.STREAM)
-        res2 = mgr.submit(w2, (state, rec))
+        res2 = system.submit(w2, (state, rec))
         state, out = res2.output
         print(f"[{w2.name}] -> {res2.workload_class.value:5s} on "
               f"{res2.node_id} via {res2.executor_name} "
@@ -67,14 +73,20 @@ def main():
 
         if i == 2:
             victim = res2.node_id
-            moved = orch.on_node_failure(victim)   # paper P4: failover
+            # paper P4: failover — instances redeploy from stored specs
+            moved = system.orchestrator.on_node_failure(victim)
             print(f"!! node {victim} failed -> redeployed {moved}")
 
-    print("\n--- manager report ---")
-    rep = mgr.report()
+    # ---- elastic: scale the stream service from its stored spec
+    n = system.scale("stream-analytics", 3)
+    print(f"scaled stream-analytics to {n} replicas")
+
+    print("\n--- system report ---")
+    rep = system.report()
     print(f"heavy: {rep['heavy']}")
     print(f"light: {rep['light']}")
-    print(f"events: {orch.events}")
+    print(f"services: {rep['services']}")
+    print(f"events: {system.events}")
 
 
 if __name__ == "__main__":

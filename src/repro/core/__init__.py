@@ -5,27 +5,33 @@ Public surface:
     ResourceMonitor, NodeCapacity                        — P3
     ContainerExecutor, UnikernelExecutor, ExecutableImage — P1
     Orchestrator, placement policies                     — P4
-    ConfigurationManager                                 — fig 2
+    ServiceSpec, ConfigurationManager, EdgeSystem        — fig 2
+    DispatchStats, DispatchSample                        — telemetry
 """
 from repro.core.executor import (BaseExecutor, ContainerExecutor,
                                  ExecutableImage, ExecutorClass,
                                  IncompatibleWorkload, UnikernelExecutor)
 from repro.core.manager import ConfigurationManager, DispatchResult
-from repro.core.orchestrator import (BinPackPolicy, LeastLoadedPolicy,
-                                     Orchestrator, PlacementError,
-                                     RoundRobinPolicy, POLICIES)
+from repro.core.orchestrator import (BinPackPolicy, Deployment,
+                                     LeastLoadedPolicy, Orchestrator,
+                                     PlacementError, RoundRobinPolicy,
+                                     POLICIES)
 from repro.core.registry import ImageRegistry
 from repro.core.resources import NodeCapacity, ResourceMonitor
 from repro.core.scheduler import SpeculativeRunner, WorkQueue
+from repro.core.spec import ServiceSpec, auto_spec
+from repro.core.system import EdgeSystem
+from repro.core.telemetry import DispatchSample, DispatchStats, percentile
 from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
                                  WorkloadKind, classify)
 
 __all__ = [
     "BaseExecutor", "ContainerExecutor", "ExecutableImage", "ExecutorClass",
     "IncompatibleWorkload", "UnikernelExecutor", "ConfigurationManager",
-    "DispatchResult", "Orchestrator", "PlacementError", "RoundRobinPolicy",
-    "LeastLoadedPolicy", "BinPackPolicy", "POLICIES", "ImageRegistry",
-    "NodeCapacity", "ResourceMonitor", "SpeculativeRunner", "WorkQueue",
-    "ClassifierConfig", "Workload", "WorkloadClass", "WorkloadKind",
-    "classify",
+    "DispatchResult", "Deployment", "Orchestrator", "PlacementError",
+    "RoundRobinPolicy", "LeastLoadedPolicy", "BinPackPolicy", "POLICIES",
+    "ImageRegistry", "NodeCapacity", "ResourceMonitor", "SpeculativeRunner",
+    "WorkQueue", "ServiceSpec", "auto_spec", "EdgeSystem", "DispatchSample",
+    "DispatchStats", "percentile", "ClassifierConfig", "Workload",
+    "WorkloadClass", "WorkloadKind", "classify",
 ]

@@ -59,7 +59,7 @@ class ExecutableImage:
     def build(cls, name: str, fn: Callable, args: Tuple,
               donate_argnums: Tuple[int, ...] = (),
               in_shardings: Any = None, mesh=None) -> "ExecutableImage":
-        t0 = time.time()
+        t0 = time.monotonic()
         kwargs = {}
         if in_shardings is not None:
             kwargs["in_shardings"] = in_shardings
@@ -75,7 +75,7 @@ class ExecutableImage:
         spec = tuple(jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), args))
         return cls(name=name, compiled=compiled, arg_spec=spec,
-                   build_time_s=time.time() - t0,
+                   build_time_s=time.monotonic() - t0,
                    arg_bytes=ma.argument_size_in_bytes,
                    temp_bytes=ma.temp_size_in_bytes,
                    output_bytes=ma.output_size_in_bytes,
@@ -151,7 +151,7 @@ class ContainerExecutor(BaseExecutor):
         key = tuple((jax.tree_util.keystr(p), tuple(a.shape), str(a.dtype))
                     for p, a in flat)
         fresh = key not in self._compiled_shapes[ep]
-        t0 = time.time()
+        t0 = time.monotonic()
         self.inflight += 1
         try:
             # entry points close over live state (params); args are payload
@@ -164,8 +164,8 @@ class ContainerExecutor(BaseExecutor):
         finally:
             self.inflight -= 1
         self._compiled_shapes[ep].add(key)
-        self.history.append(DispatchRecord(workload.name, time.time() - t0,
-                                           fresh))
+        self.history.append(DispatchRecord(workload.name,
+                                           time.monotonic() - t0, fresh))
         return out
 
 
@@ -190,12 +190,12 @@ class UnikernelExecutor(BaseExecutor):
                 f"unikernel {self.name!r} was built for "
                 f"{self.image.arg_spec}; got mismatching args "
                 f"(paper C3: single-purpose by construction)")
-        t0 = time.time()
+        t0 = time.monotonic()
         self.inflight += 1
         try:
             out = jax.block_until_ready(self.image(*args))
         finally:
             self.inflight -= 1
-        self.history.append(DispatchRecord(workload.name, time.time() - t0,
-                                           False))
+        self.history.append(DispatchRecord(workload.name,
+                                           time.monotonic() - t0, False))
         return out

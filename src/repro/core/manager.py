@@ -1,10 +1,13 @@
 """The configuration manager — the paper's central component (fig 2).
 
-Ties P1–P4 together: classify the workload (application-aware), pick or
-deploy an executor of the right class on a node with headroom
-(resource-aware, via the orchestrator's policy), dispatch, and keep
-per-class telemetry that the benchmarks report (the paper's CPU%/RAM/time
-tables).
+Ties P1–P4 together around the declarative ``ServiceSpec``: ``apply`` a
+spec (classify its workload template, build the executor ONCE through the
+registered builder, deploy ``replicas`` instances through the
+orchestrator); ``submit`` a workload (route to the least-inflight
+compatible replica, auto-applying a single-replica spec on first sight);
+``submit_many`` drains a batch through the work queue with speculative
+backup dispatch on straggling replicas.  All telemetry flows into a
+structured ``DispatchStats`` that benchmarks and serving consume.
 
 Builders: the model/serving layers register how to construct executors for
 a (kind, class) pair; the manager stays application-agnostic.
@@ -13,12 +16,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.executor import (BaseExecutor, ExecutorClass,
-                                 IncompatibleWorkload)
-from repro.core.orchestrator import Orchestrator, PlacementError
+from repro.core.executor import BaseExecutor, ExecutorClass
+from repro.core.orchestrator import Deployment, Orchestrator, PlacementError
 from repro.core.registry import ImageRegistry
+from repro.core.scheduler import SpeculativeRunner, WorkQueue
+from repro.core.spec import EXECUTOR_FOR_CLASS, ServiceSpec, auto_spec
+from repro.core.telemetry import DispatchSample, DispatchStats
 from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
                                  classify)
 
@@ -34,17 +39,24 @@ class DispatchResult:
     node_id: str
     wall_s: float
     deployed_fresh: bool
+    service: str = ""
+    winner: str = "primary"        # "backup" when a speculative copy won
 
 
 class ConfigurationManager:
     def __init__(self, orchestrator: Orchestrator,
                  registry: Optional[ImageRegistry] = None,
-                 classifier: ClassifierConfig = ClassifierConfig()):
+                 classifier: ClassifierConfig = ClassifierConfig(),
+                 runner: Optional[SpeculativeRunner] = None,
+                 queue: Optional[WorkQueue] = None):
         self.orchestrator = orchestrator
         self.registry = registry or ImageRegistry()
         self.classifier = classifier
+        self.runner = runner or SpeculativeRunner()
+        self.queue = queue or WorkQueue()
         self.builders: Dict[Tuple[str, WorkloadClass], BuilderFn] = {}
-        self.telemetry: Dict[str, list] = {"heavy": [], "light": []}
+        self.specs: Dict[str, ServiceSpec] = {}
+        self.stats = DispatchStats()
 
     def register_builder(self, kind: str, wclass: WorkloadClass,
                          builder: BuilderFn):
@@ -54,60 +66,167 @@ class ConfigurationManager:
     def route(self, workload: Workload) -> WorkloadClass:
         return classify(workload, self.classifier)
 
-    def _find_instance(self, wclass: WorkloadClass, workload: Workload,
-                       args: Tuple):
-        for dep in self.orchestrator.deployments.values():
-            ex = dep.executor
-            if ex.executor_class.value == (
-                    "container" if wclass == WorkloadClass.HEAVY
-                    else "unikernel") and ex.can_run(workload, args):
-                return dep
-        return None
+    def _builder_for(self, spec: ServiceSpec) -> BuilderFn:
+        wclass = spec.resolve_workload_class(self.classifier)
+        builder = self.builders.get((spec.workload.kind.value, wclass))
+        if builder is None:
+            raise PlacementError(
+                f"no builder for kind={spec.workload.kind.value} "
+                f"class={wclass.value}")
+        return builder
+
+    def apply(self, spec: ServiceSpec) -> List[Deployment]:
+        """Bring a declared service to its desired state.
+
+        The builder runs exactly once here — the probe build both sizes the
+        footprint and becomes the first instance's executor (no double
+        compile on the cold path); redeploys go back through the factory,
+        where the image registry caches the AOT artifacts.
+        """
+        builder = self._builder_for(spec)
+
+        def factory(mesh, _b=builder, _w=spec.workload):
+            ex, _ = _b(_w, mesh)
+            return ex
+
+        prebuilt = None
+        footprint = spec.footprint_hint
+        if footprint is None:
+            prebuilt, footprint = builder(spec.workload, None)
+        deps = self.orchestrator.apply(spec, factory, footprint=footprint,
+                                       prebuilt=prebuilt)
+        self.specs[spec.name] = spec
+        return deps
+
+    def scale(self, service: str, target: int) -> int:
+        n = self.orchestrator.scale(service, target)
+        if service in self.specs:
+            self.specs[service] = self.specs[service].with_replicas(n)
+        return n
+
+    def autoscale(self, service: str, queue_depth: int, per_instance: int,
+                  min_n: int = 1, max_n: int = 64) -> int:
+        n = self.orchestrator.autoscale(service, queue_depth, per_instance,
+                                        min_n=min_n, max_n=max_n)
+        if service in self.specs:
+            self.specs[service] = self.specs[service].with_replicas(n)
+        return n
+
+    # ------------------------------------------------------------------
+    def _candidates(self, eclass: ExecutorClass, workload: Workload,
+                    args: Tuple) -> List[Deployment]:
+        """Compatible instances, least-inflight first (ties: least-used)."""
+        deps = [d for d in self.orchestrator.deployments.values()
+                if d.executor.executor_class is eclass
+                and d.executor.can_run(workload, args)]
+        return sorted(deps, key=lambda d: (d.executor.inflight,
+                                           len(d.executor.history), d.name))
+
+    def _route_or_apply(self, workload: Workload, args: Tuple
+                        ) -> Tuple[List[Deployment], WorkloadClass, bool]:
+        wclass = self.route(workload)
+        eclass = EXECUTOR_FOR_CLASS[wclass]
+        deps = self._candidates(eclass, workload, args)
+        fresh = False
+        if not deps:
+            spec = auto_spec(workload, self.classifier)
+            try:
+                self._builder_for(spec)
+            except PlacementError:
+                # no builder for the preferred substrate — a spec may have
+                # overridden the class (e.g. serving engines are container-
+                # class even for light decode); use those instances instead.
+                # Capacity errors from apply() below still propagate.
+                other = (ExecutorClass.UNIKERNEL
+                         if eclass is ExecutorClass.CONTAINER
+                         else ExecutorClass.CONTAINER)
+                deps = self._candidates(other, workload, args)
+                if not deps:
+                    raise
+            else:
+                self.apply(spec)
+                deps = self._candidates(eclass, workload, args)
+                fresh = True
+            if not deps:
+                raise PlacementError(
+                    f"no instance can run {workload.name!r} "
+                    f"(class={wclass.value})")
+        return deps, wclass, fresh
+
+    def _record(self, workload: Workload, wclass: WorkloadClass,
+                dep: Deployment, wall: float, fresh: bool,
+                winner: str = "primary", backup_launched: bool = False):
+        self.stats.record(DispatchSample(
+            workload=workload.name, workload_class=wclass.value,
+            executor_class=dep.executor.executor_class.value,
+            executor=dep.executor.name, node=dep.node_id, wall_s=wall,
+            cold=fresh, footprint_bytes=dep.executor.footprint_bytes(),
+            winner=winner, backup_launched=backup_launched))
 
     def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
-        wclass = self.route(workload)
-        t0 = time.time()
-        dep = self._find_instance(wclass, workload, args)
-        fresh = False
-        if dep is None:
-            builder = self.builders.get((workload.kind.value, wclass))
-            if builder is None:
-                raise PlacementError(
-                    f"no builder for kind={workload.kind.value} "
-                    f"class={wclass.value}")
-            def factory(mesh, _b=builder, _w=workload):
-                ex, _ = _b(_w, mesh)
-                return ex
-            # footprint probe: build once on a null mesh-agnostic basis
-            _, footprint = builder(workload, None)
-            name = f"{wclass.value}:{workload.kind.value}:{workload.name}"
-            dep = self.orchestrator.deploy(name, factory, footprint)
-            fresh = True
+        t0 = time.monotonic()
+        deps, wclass, fresh = self._route_or_apply(workload, args)
+        dep = deps[0]
         out = dep.executor.dispatch(workload, args)
-        wall = time.time() - t0
-        rec = {"workload": workload.name, "class": wclass.value,
-               "executor": dep.executor.name, "node": dep.node_id,
-               "wall_s": wall, "fresh": fresh,
-               "footprint": dep.executor.footprint_bytes()}
-        self.telemetry["heavy" if wclass == WorkloadClass.HEAVY
-                       else "light"].append(rec)
+        wall = time.monotonic() - t0
+        self._record(workload, wclass, dep, wall, fresh)
         return DispatchResult(out, wclass, dep.executor.name, dep.node_id,
-                              wall, fresh)
+                              wall, fresh, service=dep.service)
+
+    def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
+                    speculative: bool = True) -> List[DispatchResult]:
+        """Batched dispatch: drain through the work queue; when a replica
+        straggles past the runner's latency budget, race a backup copy on
+        the next-least-inflight instance and keep the first completion.
+
+        Note: speculative copies re-dispatch the same args — only safe for
+        executors without donated input buffers (the manager never races
+        two copies on the SAME instance, but donation invalidates caller
+        buffers across instances too).
+        """
+        for item in items:
+            self.queue.put(item)
+        results: List[DispatchResult] = []
+        for _ in range(len(items)):
+            item = self.queue.get()
+            if not (isinstance(item, tuple) and len(item) == 2
+                    and isinstance(item[0], Workload)):
+                raise TypeError(
+                    f"work queue item {item!r} is not a (Workload, args) "
+                    f"pair — the system queue carries dispatchable work")
+            workload, args = item
+            t0 = time.monotonic()
+            deps, wclass, fresh = self._route_or_apply(workload, args)
+            primary, backup = deps[0], deps[1] if len(deps) > 1 else None
+            # bind workload/args as defaults: a losing speculative thread
+            # can outlive this iteration and must not see later items
+            backup_fn = None
+            if speculative and backup is not None:
+                backup_fn = (lambda _d=backup, _w=workload, _a=args:
+                             _d.executor.dispatch(_w, _a))
+            task = self.runner.run(
+                lambda _d=primary, _w=workload, _a=args:
+                _d.executor.dispatch(_w, _a),
+                backup=backup_fn)
+            dep = backup if task.winner == "backup" else primary
+            wall = time.monotonic() - t0
+            self._record(workload, wclass, dep, wall, fresh,
+                         winner=task.winner,
+                         backup_launched=task.backup_launched)
+            results.append(DispatchResult(
+                task.value, wclass, dep.executor.name, dep.node_id, wall,
+                fresh, service=dep.service, winner=task.winner))
+        return results
 
     # ------------------------------------------------------------------
     def report(self) -> Dict[str, Any]:
-        def summarize(recs):
-            if not recs:
-                return {}
-            return {
-                "count": len(recs),
-                "mean_wall_s": sum(r["wall_s"] for r in recs) / len(recs),
-                "mean_footprint_bytes": sum(r["footprint"] for r in recs)
-                / len(recs),
-            }
         return {
-            "heavy": summarize(self.telemetry["heavy"]),
-            "light": summarize(self.telemetry["light"]),
+            **self.stats.summary(),
+            "services": {name: spec.replicas
+                         for name, spec in self.specs.items()},
+            "queue": {"enqueued": self.queue.enqueued,
+                      "dequeued": self.queue.dequeued,
+                      "depth": self.queue.depth()},
             "registry": self.registry.stats(),
             "nodes": self.orchestrator.load_report(),
         }

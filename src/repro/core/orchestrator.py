@@ -5,19 +5,23 @@ submeshes or logical nodes).  The orchestrator owns
   * placement (pluggable policies mirroring the paper's orchestrators:
       round-robin ≙ Swarm's spread, least-loaded ≙ K3s default-ish
       scheduling, bin-pack ≙ Nomad's binpack),
-  * deployment + elastic scaling of executor instances,
+  * spec-driven deployment: ``apply(spec, factory)`` registers a service
+    and reconciles to ``spec.replicas`` instances; every ``Deployment``
+    carries its ``ServiceSpec``, so scaling, failover and rejoin redeploy
+    from the stored spec — no ``(name, factory, footprint)`` threading,
   * failure handling: a dead node's instances are redeployed onto healthy
-    nodes from their factories (images come from the registry cache — the
-    paper's "containers can be quickly redeployed to alternate devices").
+    nodes from their service records (images come from the registry cache —
+    the paper's "containers can be quickly redeployed to alternate
+    devices").
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.executor import BaseExecutor
 from repro.core.resources import NodeCapacity, ResourceMonitor
+from repro.core.spec import ServiceSpec
 from repro.distributed.fault_tolerance import FailureDetector
 
 
@@ -31,11 +35,23 @@ class Node:
 
 @dataclasses.dataclass
 class Deployment:
-    name: str
+    name: str                      # instance name: "<service>/<index>"
+    service: str                   # owning spec's name
     node_id: str
     executor: BaseExecutor
     footprint: int
-    factory: Callable[[Any], BaseExecutor]     # mesh → executor (redeploy)
+    spec: ServiceSpec
+
+
+@dataclasses.dataclass
+class ServiceRecord:
+    """Everything needed to (re)deploy instances of one service."""
+    spec: ServiceSpec
+    factory: Callable[[Any], BaseExecutor]     # mesh → executor
+    footprint: int
+    policy: Optional["PlacementPolicy"] = None   # per-spec override
+    prebuilt: Optional[BaseExecutor] = None    # probe build, consumed once
+    next_index: int = 0
 
 
 # --------------------------------------------------------------------------
@@ -51,21 +67,25 @@ class PlacementPolicy:
 
 
 class RoundRobinPolicy(PlacementPolicy):
-    """Spread, ignoring load (≙ Docker Swarm)."""
+    """Spread, ignoring load (≙ Docker Swarm).
+
+    The rotation index advances over the *candidate* set (healthy AND
+    fitting), so a full node drops out of the rotation instead of skewing
+    every subsequent pick toward whichever node happens to follow it.
+    """
     name = "round-robin"
 
     def __init__(self):
-        self._counter = itertools.count()
+        self._idx = 0
 
     def pick(self, nodes, monitor, footprint):
-        live = [n for n in nodes if n.healthy]
+        live = [n for n in nodes if n.healthy
+                and monitor.fits(n.node_id, footprint)]
         if not live:
             return None
-        for _ in range(len(live)):
-            n = live[next(self._counter) % len(live)]
-            if monitor.fits(n.node_id, footprint):
-                return n.node_id
-        return None
+        node = live[self._idx % len(live)]
+        self._idx += 1
+        return node.node_id
 
 
 class LeastLoadedPolicy(PlacementPolicy):
@@ -109,6 +129,7 @@ class Orchestrator:
         self.policy = policy or LeastLoadedPolicy()
         self.monitor = monitor or ResourceMonitor()
         self.nodes: Dict[str, Node] = {}
+        self.services: Dict[str, ServiceRecord] = {}
         self.deployments: Dict[str, Deployment] = {}
         self.events: List[str] = []
         self.detector = detector
@@ -128,17 +149,57 @@ class Orchestrator:
             self.on_node_failure(host_id)
 
     # ----------------------------------------------------------- deployment
-    def deploy(self, name: str, factory: Callable[[Any], BaseExecutor],
-               footprint: int) -> Deployment:
-        node_id = self.policy.pick(list(self.nodes.values()), self.monitor,
-                                   footprint)
+    def apply(self, spec: ServiceSpec,
+              factory: Callable[[Any], BaseExecutor],
+              footprint: Optional[int] = None,
+              prebuilt: Optional[BaseExecutor] = None) -> List[Deployment]:
+        """Register (or update) a service and reconcile to spec.replicas.
+
+        ``prebuilt`` is the probe-built executor from the manager's single
+        builder call; the first instance placed on a mesh-less node adopts
+        it instead of building a second time.
+        """
+        if footprint is None:
+            footprint = spec.footprint_hint
+        if footprint is None and prebuilt is not None:
+            footprint = prebuilt.footprint_bytes()
+        if footprint is None:
+            raise PlacementError(
+                f"spec {spec.name!r}: no footprint hint and no probe build")
+        policy = POLICIES[spec.placement]() if spec.placement else None
+        old = self.services.get(spec.name)
+        rec = ServiceRecord(spec=spec, factory=factory, footprint=footprint,
+                            policy=policy, prebuilt=prebuilt,
+                            next_index=old.next_index if old else 0)
+        self.services[spec.name] = rec
+        self.events.append(f"apply {spec.name} x{spec.replicas}")
+        self.scale(spec.name, spec.replicas)
+        return self.instances(spec.name)
+
+    def _policy_for(self, rec: ServiceRecord) -> PlacementPolicy:
+        return rec.policy or self.policy
+
+    def _deploy_instance(self, rec: ServiceRecord,
+                         name: Optional[str] = None) -> Deployment:
+        spec = rec.spec
+        node_id = self._policy_for(rec).pick(list(self.nodes.values()),
+                                             self.monitor, rec.footprint)
         if node_id is None:
             raise PlacementError(
-                f"no healthy node fits {footprint} bytes for {name!r}")
-        if not self.monitor.commit(node_id, name, footprint):
+                f"no healthy node fits {rec.footprint} bytes for "
+                f"{spec.name!r}")
+        if name is None:
+            name = spec.instance_name(rec.next_index)
+            rec.next_index += 1
+        if not self.monitor.commit(node_id, name, rec.footprint):
             raise PlacementError(f"admission race on {node_id} for {name!r}")
-        executor = factory(self.nodes[node_id].mesh)
-        dep = Deployment(name, node_id, executor, footprint, factory)
+        node = self.nodes[node_id]
+        if rec.prebuilt is not None and node.mesh is None:
+            executor, rec.prebuilt = rec.prebuilt, None
+        else:
+            executor = rec.factory(node.mesh)
+        dep = Deployment(name, spec.name, node_id, executor, rec.footprint,
+                         spec)
         self.deployments[name] = dep
         self.events.append(f"deploy {name} -> {node_id}")
         return dep
@@ -149,13 +210,23 @@ class Orchestrator:
             self.monitor.release(dep.node_id, name)
             self.events.append(f"undeploy {name}")
 
-    def instances(self, prefix: str = "") -> List[Deployment]:
-        return [d for n, d in self.deployments.items()
-                if n.startswith(prefix)]
+    def remove_service(self, service: str):
+        for dep in self.instances(service):
+            self.undeploy(dep.name)
+        self.services.pop(service, None)
+
+    def instances(self, service: str) -> List[Deployment]:
+        def index_key(d: Deployment):
+            tail = d.name.rsplit("/", 1)[-1]
+            return (int(tail), d.name) if tail.isdigit() else \
+                (len(self.deployments), d.name)
+        return sorted((d for d in self.deployments.values()
+                       if d.service == service), key=index_key)
 
     # ------------------------------------------------------------- failures
     def on_node_failure(self, node_id: str) -> List[str]:
-        """Redeploy everything that lived on the dead node (paper P4)."""
+        """Redeploy everything that lived on the dead node (paper P4) from
+        each instance's stored service record."""
         node = self.nodes.get(node_id)
         if node is None:
             return []
@@ -165,8 +236,12 @@ class Orchestrator:
         for dep in [d for d in self.deployments.values()
                     if d.node_id == node_id]:
             self.deployments.pop(dep.name)
+            rec = self.services.get(dep.service)
+            if rec is None:
+                self.events.append(f"failover-ORPHAN {dep.name}")
+                continue
             try:
-                self.deploy(dep.name, dep.factory, dep.footprint)
+                self._deploy_instance(rec, name=dep.name)
                 moved.append(dep.name)
                 self.events.append(f"failover {dep.name} {node_id}->"
                                    f"{self.deployments[dep.name].node_id}")
@@ -182,26 +257,29 @@ class Orchestrator:
             self.events.append(f"rejoin {node_id}")
 
     # ------------------------------------------------------------- elastic
-    def scale(self, prefix: str, target: int,
-              factory: Callable[[Any], BaseExecutor], footprint: int
-              ) -> int:
-        """Scale a named instance group up/down (paper: load-driven scaling;
-        scale-down 'conserves energy and reduces operational costs')."""
-        current = sorted(self.instances(prefix), key=lambda d: d.name)
+    def scale(self, service: str, target: int) -> int:
+        """Scale a service up/down from its stored spec (paper: load-driven
+        scaling; scale-down 'conserves energy and reduces operational
+        costs')."""
+        rec = self.services.get(service)
+        if rec is None:
+            raise PlacementError(f"unknown service {service!r}")
+        current = self.instances(service)
         n = len(current)
         if target > n:
-            for i in range(n, target):
-                self.deploy(f"{prefix}{i}", factory, footprint)
+            for _ in range(target - n):
+                self._deploy_instance(rec)
         elif target < n:
             for dep in current[target:]:
                 self.undeploy(dep.name)
-        return len(self.instances(prefix))
+        rec.spec = rec.spec.with_replicas(target)
+        return len(self.instances(service))
 
-    def autoscale(self, prefix: str, queue_depth: int, per_instance: int,
-                  factory, footprint, min_n: int = 1, max_n: int = 64) -> int:
+    def autoscale(self, service: str, queue_depth: int, per_instance: int,
+                  min_n: int = 1, max_n: int = 64) -> int:
         target = max(min_n, min(max_n,
                                 -(-queue_depth // max(per_instance, 1))))
-        return self.scale(prefix, target, factory, footprint)
+        return self.scale(service, target)
 
     # ----------------------------------------------------------------- misc
     def load_report(self) -> Dict[str, Dict[str, float]]:

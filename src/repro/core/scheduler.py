@@ -48,10 +48,10 @@ class SpeculativeRunner:
     def run(self, primary: Callable[[], Any],
             backup: Optional[Callable[[], Any]] = None) -> TaskResult:
         budget = self._budget()
-        t0 = time.time()
+        t0 = time.monotonic()
         if backup is None or budget is None:
             out = primary()
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             self._record(dt)
             return TaskResult(out, "primary", dt, False)
 
@@ -78,7 +78,7 @@ class SpeculativeRunner:
             tag, val = result_q.get()
         if tag.endswith(":error"):
             raise val
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         self._record(dt)
         return TaskResult(val, tag, dt, backup_launched)
 

@@ -1,0 +1,78 @@
+"""Declarative service specs — the paper's manifest model (fig 2).
+
+Operators state *what* to run; the runtime decides *where*.  A
+``ServiceSpec`` names a service, carries a workload template (used for
+classification and builder lookup), and declares intent: how many
+replicas, which placement policy, what latency SLO, and optionally a
+footprint hint when the operator knows better than the probe build.
+
+The spec is the single source of truth for a service's lifecycle: the
+orchestrator stores it on every ``Deployment`` so failover, rejoin and
+scaling all redeploy from the spec instead of re-threading
+``(name, factory, footprint)`` triples through each call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.executor import ExecutorClass
+from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
+                                 classify)
+
+# the paper's substrate mapping: heavy → container, light → unikernel
+EXECUTOR_FOR_CLASS = {
+    WorkloadClass.HEAVY: ExecutorClass.CONTAINER,
+    WorkloadClass.LIGHT: ExecutorClass.UNIKERNEL,
+}
+CLASS_FOR_EXECUTOR = {v: k for k, v in EXECUTOR_FOR_CLASS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """What to run; the orchestration layer decides where."""
+    name: str
+    workload: Workload                          # template for routing/build
+    executor_class: Optional[ExecutorClass] = None   # None → classify
+    replicas: int = 1
+    placement: Optional[str] = None             # POLICIES name; None → default
+    latency_slo_ms: float = 0.0
+    footprint_hint: Optional[int] = None        # bytes; None → probe build
+
+    def __post_init__(self):
+        if self.replicas < 0:
+            raise ValueError(f"spec {self.name!r}: replicas must be >= 0")
+
+    # ------------------------------------------------------------------
+    def resolve_executor_class(
+            self, classifier: ClassifierConfig = ClassifierConfig()
+    ) -> ExecutorClass:
+        """Executor class override, else application-aware classification."""
+        if self.executor_class is not None:
+            return self.executor_class
+        return EXECUTOR_FOR_CLASS[classify(self.workload, classifier)]
+
+    def resolve_workload_class(
+            self, classifier: ClassifierConfig = ClassifierConfig()
+    ) -> WorkloadClass:
+        return CLASS_FOR_EXECUTOR[self.resolve_executor_class(classifier)]
+
+    def with_replicas(self, n: int) -> "ServiceSpec":
+        return dataclasses.replace(self, replicas=n)
+
+    def instance_name(self, index: int) -> str:
+        return f"{self.name}/{index}"
+
+
+def auto_spec(workload: Workload,
+              classifier: ClassifierConfig = ClassifierConfig()
+              ) -> ServiceSpec:
+    """Synthesize a single-replica spec for an unapplied workload — keeps
+    ad-hoc ``submit`` working while everything stays spec-driven inside."""
+    wclass = classify(workload, classifier)
+    return ServiceSpec(
+        name=f"{wclass.value}:{workload.kind.value}:{workload.name}",
+        workload=workload,
+        executor_class=EXECUTOR_FOR_CLASS[wclass],
+        replicas=1,
+        latency_slo_ms=workload.latency_slo_ms)

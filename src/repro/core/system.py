@@ -1,0 +1,98 @@
+"""EdgeSystem — the one-object facade over the hybrid runtime (fig 1).
+
+Examples, benchmarks and serving drivers build ONE ``EdgeSystem`` instead
+of hand-assembling orchestrator + manager + registry + queue.  The facade
+owns the whole stack and exposes the declarative surface:
+
+    system = EdgeSystem(policy=LeastLoadedPolicy())
+    system.add_node("worker0")
+    system.register_builder("stream", WorkloadClass.LIGHT, builder)
+    system.apply(ServiceSpec(name="analytics",
+                             workload=Workload("fitbit",
+                                               WorkloadKind.STREAM),
+                             replicas=2))
+    result = system.submit(Workload("rec0", WorkloadKind.STREAM), (st, rec))
+    print(system.report())
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.manager import (BuilderFn, ConfigurationManager,
+                                DispatchResult)
+from repro.core.orchestrator import (Deployment, Orchestrator,
+                                     PlacementPolicy)
+from repro.core.registry import ImageRegistry
+from repro.core.resources import NodeCapacity, ResourceMonitor
+from repro.core.scheduler import SpeculativeRunner, WorkQueue
+from repro.core.spec import ServiceSpec
+from repro.core.workload import ClassifierConfig, Workload, WorkloadClass
+from repro.distributed.fault_tolerance import FailureDetector
+
+
+class EdgeSystem:
+    """Owns ConfigurationManager + Orchestrator + ImageRegistry + WorkQueue
+    behind apply/submit/scale/report."""
+
+    def __init__(self, policy: Optional[PlacementPolicy] = None,
+                 classifier: ClassifierConfig = ClassifierConfig(),
+                 registry: Optional[ImageRegistry] = None,
+                 monitor: Optional[ResourceMonitor] = None,
+                 detector: Optional[FailureDetector] = None,
+                 runner: Optional[SpeculativeRunner] = None):
+        self.registry = registry or ImageRegistry()
+        self.orchestrator = Orchestrator(policy=policy, monitor=monitor,
+                                         detector=detector)
+        self.queue = WorkQueue()
+        self.manager = ConfigurationManager(
+            self.orchestrator, registry=self.registry, classifier=classifier,
+            runner=runner, queue=self.queue)
+
+    # -------------------------------------------------------------- cluster
+    def add_node(self, node_id: str,
+                 capacity: Optional[NodeCapacity] = None, mesh=None):
+        self.orchestrator.add_node(node_id,
+                                   capacity or NodeCapacity.for_chips(1),
+                                   mesh=mesh)
+        return self
+
+    # ------------------------------------------------------------- services
+    def register_builder(self, kind: str, wclass: WorkloadClass,
+                         builder: BuilderFn) -> "EdgeSystem":
+        self.manager.register_builder(kind, wclass, builder)
+        return self
+
+    def apply(self, spec: ServiceSpec) -> List[Deployment]:
+        return self.manager.apply(spec)
+
+    def scale(self, service: str, target: int) -> int:
+        return self.manager.scale(service, target)
+
+    def autoscale(self, service: str, per_instance: int,
+                  min_n: int = 1, max_n: int = 64) -> int:
+        """Queue-depth-driven scaling of an applied service."""
+        return self.manager.autoscale(service, self.queue.depth(),
+                                      per_instance, min_n=min_n, max_n=max_n)
+
+    def instances(self, service: str) -> List[Deployment]:
+        return self.orchestrator.instances(service)
+
+    # ------------------------------------------------------------- dispatch
+    def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
+        return self.manager.submit(workload, args)
+
+    def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
+                    speculative: bool = True) -> List[DispatchResult]:
+        return self.manager.submit_many(items, speculative=speculative)
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def stats(self):
+        return self.manager.stats
+
+    @property
+    def events(self) -> List[str]:
+        return self.orchestrator.events
+
+    def report(self) -> Dict[str, Any]:
+        return self.manager.report()

@@ -16,18 +16,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax >= 0.5 takes (and on newer versions wants) explicit axis_types;
+    # jax 0.4.x has neither the kwarg nor jax.sharding.AxisType.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) devices tests have."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_chips(mesh) -> int:

@@ -1,4 +1,9 @@
-"""Serving driver: continuous-batching engine behind the hybrid router.
+"""Serving driver: continuous-batching engine deployed as a ServiceSpec.
+
+The engine is not hand-built: a declarative spec is applied to an
+``EdgeSystem`` whose builder wraps a ``ServingEngine`` in a
+container-class executor, and request/latency telemetry comes out of the
+same structured ``DispatchStats`` the rest of the runtime reports.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --requests 8
@@ -22,29 +27,56 @@ def main() -> None:
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced_config
-    from repro.serving.engine import ServingEngine
+    from repro.core import (EdgeSystem, ExecutorClass, ServiceSpec, Workload,
+                            WorkloadClass, WorkloadKind)
+    from repro.serving.router import make_engine_builder
 
     cfg = get_reduced_config(args.arch) if args.reduced \
         else get_config(args.arch)
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
 
-    engine = ServingEngine(cfg, max_slots=args.slots, max_seq=args.max_seq)
+    system = EdgeSystem()
+    system.add_node("edge0")
+    system.register_builder(
+        "decode", WorkloadClass.HEAVY,
+        make_engine_builder(cfg, max_slots=args.slots, max_seq=args.max_seq))
+    spec = ServiceSpec(
+        name="llm-serving",
+        workload=Workload("serve", WorkloadKind.DECODE, cfg,
+                          batch=args.slots, seq_len=args.max_new),
+        executor_class=ExecutorClass.CONTAINER)
+    (dep,) = system.apply(spec)
+    engine = dep.executor.engine
+
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(args.requests):
         plen = int(rng.integers(4, args.max_seq // 2))
         engine.submit(rng.integers(0, cfg.vocab_size, size=plen),
                       max_new_tokens=args.max_new)
     done = engine.run_until_drained()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s, {engine.ticks} ticks)")
+          f"({toks / dt:.1f} tok/s, {engine.ticks} ticks) "
+          f"via {dep.name} on {dep.node_id}")
     for r in done[:3]:
         ttft = (r.first_token_at - r.submitted_at) * 1e3
         print(f"  rid={r.rid} prompt={len(r.prompt)} ttft={ttft:.0f}ms "
               f"generated={r.generated[:8]}...")
+
+    stats = engine.stats()
+    for key in ("p50_request_wall_s", "p95_request_wall_s",
+                "p99_request_wall_s", "p50_ttft_s", "p95_ttft_s"):
+        if key in stats:
+            print(f"  {key}={stats[key] * 1e3:.1f}ms")
+    summary = engine.dispatch_stats.summary()["heavy"]
+    if summary:
+        print(f"  dispatch_stats: count={summary['count']} "
+              f"p50={summary['p50_wall_s'] * 1e3:.1f}ms "
+              f"p95={summary['p95_wall_s'] * 1e3:.1f}ms "
+              f"p99={summary['p99_wall_s'] * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.executor import (BaseExecutor, DispatchRecord,
+                                 ExecutorClass)
+from repro.core.telemetry import DispatchSample, DispatchStats, percentile
+from repro.core.workload import Workload, WorkloadKind
 from repro.models.config import ModelConfig
 from repro.models.model import build_model
 from repro.serving.kv_cache import SlotKVCache
@@ -71,6 +75,7 @@ class ServingEngine:
         self.last_tokens = jnp.zeros((max_slots,), jnp.int32)
         self._rid = itertools.count()
         self.ticks = 0
+        self.dispatch_stats = DispatchStats()
 
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_fn,
@@ -104,7 +109,7 @@ class ServingEngine:
                latency_slo_ms: float = 0.0) -> int:
         req = Request(next(self._rid), np.asarray(prompt, np.int32),
                       max_new_tokens, eos_token, latency_slo_ms,
-                      submitted_at=time.time())
+                      submitted_at=time.monotonic())
         self.queue.append(req)
         return req.rid
 
@@ -126,15 +131,11 @@ class ServingEngine:
             self.last_tokens = self.last_tokens.at[slot].set(first)
             req.slot = slot
             req.generated.append(first)
-            req.first_token_at = time.time()
+            req.first_token_at = time.monotonic()
             self.active[req.rid] = req
             if (req.eos_token is not None and first == req.eos_token) or \
                     req.max_new_tokens <= 1:
-                req.done = True
-                req.finished_at = req.first_token_at
-                self.kv.free(slot)
-                del self.active[req.rid]
-                self.completed.append(req)
+                self._finish(req, req.first_token_at)
 
     def step(self) -> int:
         """One engine tick: admit + one decode for all active slots."""
@@ -149,7 +150,7 @@ class ServingEngine:
             self.kv.cache_len, jnp.asarray(active_mask))
         self.last_tokens = tokens
         toks = np.asarray(tokens)
-        now = time.time()
+        now = time.monotonic()
         finished = []
         for req in self.active.values():
             t = int(toks[req.slot])
@@ -161,13 +162,21 @@ class ServingEngine:
                     int(self.kv.cache_len[req.slot]) >= self.kv.max_seq - 1:
                 finished.append(req)
         for req in finished:
-            req.done = True
-            req.finished_at = now
-            self.kv.free(req.slot)
-            del self.active[req.rid]
-            self.completed.append(req)
+            self._finish(req, now)
         self.ticks += 1
         return len(self.active)
+
+    def _finish(self, req: Request, now: float):
+        req.done = True
+        req.finished_at = now
+        self.kv.free(req.slot)
+        del self.active[req.rid]
+        self.completed.append(req)
+        self.dispatch_stats.record(DispatchSample(
+            workload=f"request-{req.rid}", workload_class="heavy",
+            executor_class="container", executor="serving-engine",
+            node="local", wall_s=now - req.submitted_at, cold=False,
+            footprint_bytes=0))
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         for _ in range(max_ticks):
@@ -178,9 +187,65 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "ticks": self.ticks,
             "active": len(self.active),
             "queued": len(self.queue),
             "slot_utilization": self.kv.utilization(),
         }
+        ttfts = [r.first_token_at - r.submitted_at for r in self.completed
+                 if r.first_token_at is not None]
+        walls = [r.finished_at - r.submitted_at for r in self.completed
+                 if r.finished_at is not None]
+        for name, xs in (("ttft_s", ttfts), ("request_wall_s", walls)):
+            if xs:
+                for q in (50, 95, 99):
+                    out[f"p{q}_{name}"] = percentile(xs, q)
+        return out
+
+
+class EngineExecutor(BaseExecutor):
+    """Container-class executor wrapping a continuous-batching engine, so a
+    serving deployment is declared through ``ServiceSpec``/``EdgeSystem``
+    like every other service.
+
+    ``dispatch`` submits the prompt and steps the SHARED engine until that
+    request completes — requests submitted earlier ride along in the same
+    decode batch, so batching is preserved when callers enqueue several
+    prompts before draining.
+    """
+
+    executor_class = ExecutorClass.CONTAINER
+
+    def __init__(self, name: str, engine: ServingEngine, mesh=None):
+        super().__init__(name, mesh)
+        self.engine = engine
+
+    def footprint_bytes(self) -> int:
+        params = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(self.engine.params))
+        kv = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(self.engine.kv.caches))
+        return params + kv
+
+    def can_run(self, workload: Workload, args) -> bool:
+        return workload.kind in (WorkloadKind.PREFILL, WorkloadKind.DECODE,
+                                 WorkloadKind.GENERIC)
+
+    def dispatch(self, workload: Workload, args):
+        (prompt,) = args
+        t0 = time.monotonic()
+        self.inflight += 1
+        try:
+            rid = self.engine.submit(
+                prompt, max_new_tokens=max(workload.seq_len, 1),
+                latency_slo_ms=workload.latency_slo_ms)
+            while not any(r.rid == rid for r in self.engine.completed):
+                if self.engine.step() == 0 and not self.engine.queue:
+                    break
+        finally:
+            self.inflight -= 1
+        req = next(r for r in self.engine.completed if r.rid == rid)
+        self.history.append(DispatchRecord(workload.name,
+                                           time.monotonic() - t0, False))
+        return req

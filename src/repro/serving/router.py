@@ -10,16 +10,15 @@ the ConfigurationManager how to construct
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.executor import (BaseExecutor, ContainerExecutor,
-                                 UnikernelExecutor)
-from repro.core.manager import ConfigurationManager
+                                 ExecutorClass, UnikernelExecutor)
 from repro.core.registry import ImageRegistry
+from repro.core.spec import ServiceSpec
 from repro.core.workload import Workload, WorkloadClass, WorkloadKind
 from repro.data import stream as stream_lib
 from repro.launch import programs
@@ -120,20 +119,57 @@ def make_stream_container_builder(scfg: stream_lib.StreamConfig):
     return builder
 
 
-def assemble_edge_system(manager: ConfigurationManager, heavy_cfg,
-                         light_cfg=None, scfg=None,
+def make_engine_builder(cfg, max_slots: int = 4, max_seq: int = 128,
+                        params=None, seed: int = 0):
+    """Container-class: a continuous-batching ``ServingEngine`` wrapped as
+    an executor, so serving deployments go through ``ServiceSpec`` too."""
+    from repro.serving.engine import EngineExecutor, ServingEngine
+
+    def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
+        engine = ServingEngine(cfg, max_slots=max_slots, max_seq=max_seq,
+                               params=params, seed=seed, mesh=mesh)
+        ex = EngineExecutor(f"engine[{cfg.name}]", engine, mesh=mesh)
+        return ex, ex.footprint_bytes()
+
+    return builder
+
+
+def assemble_edge_system(system, heavy_cfg, light_cfg=None, scfg=None,
                          params_heavy=None, params_light=None):
-    """Register the standard builder set (used by examples + benchmarks)."""
+    """Register the standard builder set (used by examples + benchmarks).
+
+    ``system`` is an ``EdgeSystem`` (or anything exposing
+    ``register_builder`` + ``registry``).
+    """
     scfg = scfg or stream_lib.StreamConfig()
-    registry = manager.registry
+    registry = system.registry
     cb = make_container_builder(heavy_cfg, params=params_heavy)
     for kind in ("train", "prefill", "decode", "generic"):
-        manager.register_builder(kind, WorkloadClass.HEAVY, cb)
+        system.register_builder(kind, WorkloadClass.HEAVY, cb)
     if light_cfg is not None:
         ub = make_unikernel_decode_builder(light_cfg, registry,
                                            params=params_light)
-        manager.register_builder("decode", WorkloadClass.LIGHT, ub)
-        manager.register_builder("generic", WorkloadClass.LIGHT, ub)
-    manager.register_builder("stream", WorkloadClass.LIGHT,
-                             make_stream_builder(registry, scfg))
-    return manager
+        system.register_builder("decode", WorkloadClass.LIGHT, ub)
+        system.register_builder("generic", WorkloadClass.LIGHT, ub)
+    system.register_builder("stream", WorkloadClass.LIGHT,
+                            make_stream_builder(registry, scfg))
+    return system
+
+
+def standard_specs(heavy_cfg, replicas_heavy: int = 1,
+                   replicas_stream: int = 1) -> Tuple[ServiceSpec, ...]:
+    """Declarative manifests for the paper's two standing services: the
+    heavy CV-style inference path and the light stream-analytics path."""
+    cv = ServiceSpec(
+        name="cv-infer",
+        workload=Workload("cv-frame", WorkloadKind.GENERIC, heavy_cfg,
+                          batch=1, seq_len=32,
+                          est_flops=2.0 * heavy_cfg.num_params() * 32 * 300),
+        executor_class=ExecutorClass.CONTAINER,
+        replicas=replicas_heavy)
+    analytics = ServiceSpec(
+        name="stream-analytics",
+        workload=Workload("fitbit", WorkloadKind.STREAM),
+        executor_class=ExecutorClass.UNIKERNEL,
+        replicas=replicas_stream)
+    return cv, analytics

@@ -14,6 +14,11 @@ def pytest_addoption(parser):
     parser.addoption("--run-slow", action="store_true", default=False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: long-running; needs --run-slow")
+
+
 def pytest_collection_modifyitems(config, items):
     if config.getoption("--run-slow"):
         return

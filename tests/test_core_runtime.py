@@ -7,10 +7,11 @@ import pytest
 
 from repro.configs import get_reduced_config
 from repro.core import (BinPackPolicy, ClassifierConfig, ConfigurationManager,
-                        ContainerExecutor, ExecutableImage, ImageRegistry,
-                        IncompatibleWorkload, LeastLoadedPolicy, NodeCapacity,
-                        Orchestrator, PlacementError, ResourceMonitor,
-                        RoundRobinPolicy, UnikernelExecutor, Workload,
+                        ContainerExecutor, ExecutableImage, ExecutorClass,
+                        ImageRegistry, IncompatibleWorkload,
+                        LeastLoadedPolicy, NodeCapacity, Orchestrator,
+                        PlacementError, ResourceMonitor, RoundRobinPolicy,
+                        ServiceSpec, UnikernelExecutor, Workload,
                         WorkloadClass, WorkloadKind, classify)
 from repro.data import stream as stream_lib
 from repro.serving import router
@@ -85,56 +86,93 @@ def _dummy_factory(mesh):
     return ContainerExecutor("dummy", {"generic": lambda x: x})
 
 
+def _spec(name, replicas=1, footprint=10):
+    return ServiceSpec(name=name,
+                       workload=Workload(name, WorkloadKind.GENERIC),
+                       executor_class=ExecutorClass.CONTAINER,
+                       replicas=replicas, footprint_hint=footprint)
+
+
 def test_round_robin_spreads():
     o = _orch(RoundRobinPolicy())
-    nodes = [o.deploy(f"i{i}", _dummy_factory, 10).node_id for i in range(4)]
-    assert sorted(nodes) == ["n0", "n1", "n2", "n3"]
+    deps = o.apply(_spec("i", replicas=4), _dummy_factory)
+    assert sorted(d.node_id for d in deps) == ["n0", "n1", "n2", "n3"]
+
+
+def test_round_robin_full_node_does_not_skew_spread():
+    # a node with no headroom drops out of the rotation instead of
+    # permanently skewing picks toward whichever node follows it
+    o = _orch(RoundRobinPolicy(), n=4, hbm=100)
+    o.monitor.commit("n0", "hog", 95)            # n0 is (almost) full
+    deps = o.apply(_spec("i", replicas=6), _dummy_factory)
+    counts = {}
+    for d in deps:
+        counts[d.node_id] = counts.get(d.node_id, 0) + 1
+    assert counts == {"n1": 2, "n2": 2, "n3": 2}
 
 
 def test_least_loaded_balances():
     o = _orch(LeastLoadedPolicy())
-    o.deploy("big", _dummy_factory, 60)
-    d2 = o.deploy("next", _dummy_factory, 10)
-    assert d2.node_id != o.deployments["big"].node_id
+    o.apply(_spec("big", footprint=60), _dummy_factory)
+    (d2,) = o.apply(_spec("next", footprint=10), _dummy_factory)
+    assert d2.node_id != o.instances("big")[0].node_id
 
 
 def test_bin_pack_fills_tightest():
     o = _orch(BinPackPolicy())
-    o.deploy("a", _dummy_factory, 60)            # n? gets 60
-    first = o.deployments["a"].node_id
-    d = o.deploy("b", _dummy_factory, 30)        # tightest fit = same node
-    assert d.node_id == first
+    o.apply(_spec("a", footprint=60), _dummy_factory)
+    first = o.instances("a")[0].node_id
+    (d,) = o.apply(_spec("b", footprint=30), _dummy_factory)
+    assert d.node_id == first                   # tightest fit = same node
+
+
+def test_spec_placement_override():
+    # the spec's placement policy wins over the orchestrator default
+    o = _orch(BinPackPolicy())
+    spread = ServiceSpec(name="s", workload=Workload("s",
+                                                     WorkloadKind.GENERIC),
+                         executor_class=ExecutorClass.CONTAINER, replicas=4,
+                         placement="round-robin", footprint_hint=10)
+    deps = o.apply(spread, _dummy_factory)
+    assert len({d.node_id for d in deps}) == 4
 
 
 def test_admission_respects_capacity():
     o = _orch(LeastLoadedPolicy(), n=1, hbm=100)
-    o.deploy("a", _dummy_factory, 80)
+    o.apply(_spec("a", footprint=80), _dummy_factory)
     with pytest.raises(PlacementError):
-        o.deploy("b", _dummy_factory, 40)        # 80+40 > 100 → refused
+        o.apply(_spec("b", footprint=40), _dummy_factory)  # 80+40 > 100
 
 
 def test_failover_redeployes_instances():
     o = _orch(LeastLoadedPolicy(), n=3)
-    deps = [o.deploy(f"i{i}", _dummy_factory, 10) for i in range(6)]
+    deps = o.apply(_spec("i", replicas=6), _dummy_factory)
     victim = deps[0].node_id
     on_victim = [d.name for d in deps if d.node_id == victim]
     moved = o.on_node_failure(victim)
     assert sorted(moved) == sorted(on_victim)
     for name in on_victim:
         assert o.deployments[name].node_id != victim
+        # redeployed instances still carry their spec
+        assert o.deployments[name].spec.name == "i"
     # capacity of dead node is gone
     assert victim not in o.monitor.capacity
 
 
 def test_elastic_scale_up_down():
     o = _orch(LeastLoadedPolicy())
-    assert o.scale("svc", 5, _dummy_factory, 10) == 5
-    assert o.scale("svc", 2, _dummy_factory, 10) == 2
+    o.apply(_spec("svc", replicas=0), _dummy_factory)
+    assert o.scale("svc", 5) == 5
+    assert o.scale("svc", 2) == 2
     assert len(o.instances("svc")) == 2
+    # the stored spec tracks the scaled replica count
+    assert o.services["svc"].spec.replicas == 2
     # autoscale from queue depth
-    n = o.autoscale("svc", queue_depth=17, per_instance=4,
-                    factory=_dummy_factory, footprint=10, max_n=8)
+    n = o.autoscale("svc", queue_depth=17, per_instance=4, max_n=8)
     assert n == 5  # ceil(17/4)
+    # unknown services can't scale — specs are the only entry point
+    with pytest.raises(PlacementError):
+        o.scale("ghost", 3)
 
 
 # ------------------------------------------------------------------ manager

@@ -5,6 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; the rest of the "
+    "suite must still collect without it")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,

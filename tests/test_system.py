@@ -10,23 +10,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.core import (ConfigurationManager, LeastLoadedPolicy,
-                        NodeCapacity, Orchestrator, Workload, WorkloadClass,
+from repro.core import (EdgeSystem, ExecutorClass, LeastLoadedPolicy,
+                        NodeCapacity, ServiceSpec, Workload, WorkloadClass,
                         WorkloadKind)
 from repro.data import stream as stream_lib
 from repro.serving import router
 
 
 def _system(n_nodes=3):
-    orch = Orchestrator(policy=LeastLoadedPolicy())
+    system = EdgeSystem(policy=LeastLoadedPolicy())
     for i in range(n_nodes):
-        orch.add_node(f"edge{i}", NodeCapacity(chips=1, hbm_bytes=10 ** 12))
-    mgr = ConfigurationManager(orch)
+        system.add_node(f"edge{i}",
+                        NodeCapacity(chips=1, hbm_bytes=10 ** 12))
     light_cfg = get_reduced_config("edge-stream-light")
     scfg = stream_lib.StreamConfig(num_users=8, batch_records=16)
-    router.assemble_edge_system(mgr, heavy_cfg=light_cfg,
+    router.assemble_edge_system(system, heavy_cfg=light_cfg,
                                 light_cfg=light_cfg, scfg=scfg)
-    return mgr, orch, light_cfg, scfg
+    return system, system.orchestrator, light_cfg, scfg
 
 
 def test_mixed_workloads_route_and_complete():
@@ -89,21 +89,24 @@ def test_node_failure_mid_service_failover_and_continue():
 
 
 def test_elastic_scale_with_load():
-    mgr, orch, cfg, scfg = _system(n_nodes=4)
-    from repro.core import WorkQueue
-    q = WorkQueue()
+    system, orch, cfg, scfg = _system(n_nodes=4)
     for i in range(20):
-        q.put(i)
+        system.queue.put((Workload(f"pending{i}", WorkloadKind.GENERIC),
+                          ()))
 
-    def factory(mesh):
+    def builder(workload, mesh):
         from repro.core import ContainerExecutor
-        return ContainerExecutor("svc", {"generic": lambda x: x})
+        ex = ContainerExecutor("svc", {"generic": lambda x: x}, mesh=mesh)
+        return ex, 10 ** 6
 
-    n = orch.autoscale("svc-", q.depth(), per_instance=4, factory=factory,
-                       footprint=10 ** 6, max_n=8)
-    assert n == 5
-    while q.depth() > 4:
-        q.get()
-    n = orch.autoscale("svc-", q.depth(), per_instance=4, factory=factory,
-                       footprint=10 ** 6, min_n=1)
+    system.register_builder("generic", WorkloadClass.HEAVY, builder)
+    system.apply(ServiceSpec(
+        name="svc", workload=Workload("svc", WorkloadKind.GENERIC),
+        executor_class=ExecutorClass.CONTAINER, replicas=1,
+        footprint_hint=10 ** 6))
+    n = system.autoscale("svc", per_instance=4, max_n=8)
+    assert n == 5                                   # ceil(20/4)
+    while system.queue.depth() > 4:
+        system.queue.get()
+    n = system.autoscale("svc", per_instance=4, min_n=1)
     assert n == 1                                   # scaled down: saves power
