@@ -5,9 +5,11 @@ spec (classify its workload template, build the executor ONCE through the
 registered builder, deploy ``replicas`` instances through the
 orchestrator); ``submit`` a workload (route to the least-inflight
 compatible replica, auto-applying a single-replica spec on first sight);
-``submit_many`` drains a batch through the work queue with speculative
-backup dispatch on straggling replicas.  All telemetry flows into a
-structured ``DispatchStats`` that benchmarks and serving consume.
+``submit_many`` dispatches a batch concurrently (every item in flight
+before any result is collected, so engine-backed replicas batch requests
+in their background loop) with speculative backup dispatch on straggling
+replicas.  All telemetry flows into a structured ``DispatchStats`` that
+benchmarks and serving consume.
 
 Builders: the model/serving layers register how to construct executors for
 a (kind, class) pair; the manager stays application-agnostic.
@@ -15,7 +17,9 @@ a (kind, class) pair; the manager stays application-agnostic.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.executor import BaseExecutor, ExecutorClass
@@ -57,6 +61,12 @@ class ConfigurationManager:
         self.builders: Dict[Tuple[str, WorkloadClass], BuilderFn] = {}
         self.specs: Dict[str, ServiceSpec] = {}
         self.stats = DispatchStats()
+        # routing and deployment mutate shared orchestrator state
+        # (auto-apply, candidate ordering over the deployments dict);
+        # concurrent dispatchers serialize through this, not the dispatch.
+        # RLock: apply() is reached both directly and from _route_or_apply
+        self._route_lock = threading.RLock()
+        self._drain_lock = threading.Lock()
 
     def register_builder(self, kind: str, wclass: WorkloadClass,
                          builder: BuilderFn):
@@ -83,34 +93,39 @@ class ConfigurationManager:
         compile on the cold path); redeploys go back through the factory,
         where the image registry caches the AOT artifacts.
         """
-        builder = self._builder_for(spec)
+        with self._route_lock:
+            builder = self._builder_for(spec)
 
-        def factory(mesh, _b=builder, _w=spec.workload):
-            ex, _ = _b(_w, mesh)
-            return ex
+            def factory(mesh, _b=builder, _w=spec.workload):
+                ex, _ = _b(_w, mesh)
+                return ex
 
-        prebuilt = None
-        footprint = spec.footprint_hint
-        if footprint is None:
-            prebuilt, footprint = builder(spec.workload, None)
-        deps = self.orchestrator.apply(spec, factory, footprint=footprint,
-                                       prebuilt=prebuilt)
-        self.specs[spec.name] = spec
-        return deps
+            prebuilt = None
+            footprint = spec.footprint_hint
+            if footprint is None:
+                prebuilt, footprint = builder(spec.workload, None)
+            deps = self.orchestrator.apply(spec, factory,
+                                           footprint=footprint,
+                                           prebuilt=prebuilt)
+            self.specs[spec.name] = spec
+            return deps
 
     def scale(self, service: str, target: int) -> int:
-        n = self.orchestrator.scale(service, target)
-        if service in self.specs:
-            self.specs[service] = self.specs[service].with_replicas(n)
-        return n
+        with self._route_lock:        # deployments mutate under routing lock
+            n = self.orchestrator.scale(service, target)
+            if service in self.specs:
+                self.specs[service] = self.specs[service].with_replicas(n)
+            return n
 
     def autoscale(self, service: str, queue_depth: int, per_instance: int,
                   min_n: int = 1, max_n: int = 64) -> int:
-        n = self.orchestrator.autoscale(service, queue_depth, per_instance,
-                                        min_n=min_n, max_n=max_n)
-        if service in self.specs:
-            self.specs[service] = self.specs[service].with_replicas(n)
-        return n
+        with self._route_lock:
+            n = self.orchestrator.autoscale(service, queue_depth,
+                                            per_instance,
+                                            min_n=min_n, max_n=max_n)
+            if service in self.specs:
+                self.specs[service] = self.specs[service].with_replicas(n)
+            return n
 
     # ------------------------------------------------------------------
     def _candidates(self, eclass: ExecutorClass, workload: Workload,
@@ -165,7 +180,8 @@ class ConfigurationManager:
 
     def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
         t0 = time.monotonic()
-        deps, wclass, fresh = self._route_or_apply(workload, args)
+        with self._route_lock:
+            deps, wclass, fresh = self._route_or_apply(workload, args)
         dep = deps[0]
         out = dep.executor.dispatch(workload, args)
         wall = time.monotonic() - t0
@@ -173,50 +189,73 @@ class ConfigurationManager:
         return DispatchResult(out, wclass, dep.executor.name, dep.node_id,
                               wall, fresh, service=dep.service)
 
+    def _dispatch_one(self, workload: Workload, args: Tuple,
+                      speculative: bool) -> DispatchResult:
+        t0 = time.monotonic()
+        with self._route_lock:
+            deps, wclass, fresh = self._route_or_apply(workload, args)
+        primary, backup = deps[0], deps[1] if len(deps) > 1 else None
+        # bind workload/args as defaults: a losing speculative thread
+        # can outlive this call and must not see later items
+        backup_fn = None
+        if speculative and backup is not None:
+            backup_fn = (lambda _d=backup, _w=workload, _a=args:
+                         _d.executor.dispatch(_w, _a))
+        task = self.runner.run(
+            lambda _d=primary, _w=workload, _a=args:
+            _d.executor.dispatch(_w, _a),
+            backup=backup_fn)
+        dep = backup if task.winner == "backup" else primary
+        wall = time.monotonic() - t0
+        self._record(workload, wclass, dep, wall, fresh,
+                     winner=task.winner,
+                     backup_launched=task.backup_launched)
+        return DispatchResult(
+            task.value, wclass, dep.executor.name, dep.node_id, wall,
+            fresh, service=dep.service, winner=task.winner)
+
     def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
-                    speculative: bool = True) -> List[DispatchResult]:
-        """Batched dispatch: drain through the work queue; when a replica
-        straggles past the runner's latency budget, race a backup copy on
-        the next-least-inflight instance and keep the first completion.
+                    speculative: bool = True, concurrent: bool = True,
+                    max_workers: int = 16) -> List[DispatchResult]:
+        """Batched dispatch through the work queue.
+
+        With ``concurrent=True`` (default) every item is dispatched before
+        any result is collected: each dispatch runs in a worker thread, so
+        container-class requests landing on a shared ``ServingEngine``
+        batch in its engine loop while unikernel-class work proceeds in
+        parallel — overlapped, not one-request-at-a-time.
+        ``concurrent=False`` restores the strictly serial drain.
+
+        Speculation rides along in either mode: when a replica straggles
+        past the runner's latency budget, a backup copy races on the
+        next-least-inflight instance and the first completion wins.
 
         Note: speculative copies re-dispatch the same args — only safe for
         executors without donated input buffers (the manager never races
         two copies on the SAME instance, but donation invalidates caller
         buffers across instances too).
         """
-        for item in items:
-            self.queue.put(item)
-        results: List[DispatchResult] = []
-        for _ in range(len(items)):
-            item = self.queue.get()
+        # put+get atomically: two concurrent batches must not interleave
+        # each other's queue round-trip, and the queue is drained of
+        # exactly len(items) entries even when validation fails below
+        with self._drain_lock:
+            for item in items:
+                self.queue.put(item)
+            work = [self.queue.get() for _ in range(len(items))]
+        for item in work:
             if not (isinstance(item, tuple) and len(item) == 2
                     and isinstance(item[0], Workload)):
                 raise TypeError(
                     f"work queue item {item!r} is not a (Workload, args) "
                     f"pair — the system queue carries dispatchable work")
-            workload, args = item
-            t0 = time.monotonic()
-            deps, wclass, fresh = self._route_or_apply(workload, args)
-            primary, backup = deps[0], deps[1] if len(deps) > 1 else None
-            # bind workload/args as defaults: a losing speculative thread
-            # can outlive this iteration and must not see later items
-            backup_fn = None
-            if speculative and backup is not None:
-                backup_fn = (lambda _d=backup, _w=workload, _a=args:
-                             _d.executor.dispatch(_w, _a))
-            task = self.runner.run(
-                lambda _d=primary, _w=workload, _a=args:
-                _d.executor.dispatch(_w, _a),
-                backup=backup_fn)
-            dep = backup if task.winner == "backup" else primary
-            wall = time.monotonic() - t0
-            self._record(workload, wclass, dep, wall, fresh,
-                         winner=task.winner,
-                         backup_launched=task.backup_launched)
-            results.append(DispatchResult(
-                task.value, wclass, dep.executor.name, dep.node_id, wall,
-                fresh, service=dep.service, winner=task.winner))
-        return results
+        if concurrent and len(work) > 1:
+            with ThreadPoolExecutor(
+                    max_workers=min(len(work), max_workers),
+                    thread_name_prefix="submit-many") as pool:
+                return list(pool.map(
+                    lambda it: self._dispatch_one(it[0], it[1], speculative),
+                    work))
+        return [self._dispatch_one(w, a, speculative) for w, a in work]
 
     # ------------------------------------------------------------------
     def report(self) -> Dict[str, Any]:

@@ -249,12 +249,37 @@ class Orchestrator:
                 self.events.append(f"failover-FAILED {dep.name}")
         return moved
 
-    def on_node_rejoin(self, node_id: str):
+    def on_node_rejoin(self, node_id: str) -> List[str]:
+        """Mark the node healthy and re-reconcile every service.
+
+        A failover that found no capacity pops the instance from
+        ``deployments`` (``failover-FAILED``) — returning capacity must
+        heal that loss, so rejoin reconciles each service back to its
+        stored ``spec.replicas`` instead of just flipping the health bit.
+        """
         node = self.nodes.get(node_id)
-        if node is not None and not node.healthy:
-            node.healthy = True
-            self.monitor.register_node(node_id, node.capacity)
-            self.events.append(f"rejoin {node_id}")
+        if node is None or node.healthy:
+            return []
+        node.healthy = True
+        self.monitor.register_node(node_id, node.capacity)
+        self.events.append(f"rejoin {node_id}")
+        return self.reconcile()
+
+    def reconcile(self) -> List[str]:
+        """Deploy instances until every service meets ``spec.replicas``;
+        best-effort — services that still don't fit stay degraded."""
+        healed = []
+        for service, rec in self.services.items():
+            missing = rec.spec.replicas - len(self.instances(service))
+            for _ in range(missing):
+                try:
+                    dep = self._deploy_instance(rec)
+                except PlacementError:
+                    self.events.append(f"reconcile-FAILED {service}")
+                    break
+                healed.append(dep.name)
+                self.events.append(f"reconcile {dep.name} -> {dep.node_id}")
+        return healed
 
     # ------------------------------------------------------------- elastic
     def scale(self, service: str, target: int) -> int:

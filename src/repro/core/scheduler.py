@@ -47,40 +47,78 @@ class SpeculativeRunner:
 
     def run(self, primary: Callable[[], Any],
             backup: Optional[Callable[[], Any]] = None) -> TaskResult:
+        """Run ``primary``; race/fall back to ``backup`` when available.
+
+        An erroring copy never wins the race: a fast-failing primary
+        triggers the backup immediately, and ``run`` raises only when
+        every launched copy has failed.  ``_latencies`` records each
+        winner's OWN execution time (measured inside its thread), not the
+        caller-observed wall — race-wait time must not inflate the median
+        that sets future backup budgets.
+        """
         budget = self._budget()
         t0 = time.monotonic()
-        if backup is None or budget is None:
+        if budget is None:
+            # not enough history to race; still fall back on error
+            try:
+                out = primary()
+            except Exception:
+                if backup is None:
+                    raise
+                t1 = time.monotonic()
+                out = backup()          # raises if all copies fail
+                dt = time.monotonic() - t1
+                self._record(dt)
+                return TaskResult(out, "backup",
+                                  time.monotonic() - t0, True)
+            dt = time.monotonic() - t0
+            self._record(dt)
+            return TaskResult(out, "primary", dt, False)
+        if backup is None:
             out = primary()
             dt = time.monotonic() - t0
             self._record(dt)
             return TaskResult(out, "primary", dt, False)
 
-        result_q: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+        # (tag, ok, value-or-error, own_wall_s)
+        result_q: "queue.Queue[Tuple[str, bool, Any, float]]" = queue.Queue()
 
         def wrap(tag, fn):
             def go():
+                ts = time.monotonic()
                 try:
-                    result_q.put((tag, fn()))
+                    val = fn()
+                    result_q.put((tag, True, val, time.monotonic() - ts))
                 except Exception as e:  # noqa: BLE001
-                    result_q.put((tag + ":error", e))
+                    result_q.put((tag, False, e, time.monotonic() - ts))
             return go
 
-        t_primary = threading.Thread(target=wrap("primary", primary),
-                                     daemon=True)
-        t_primary.start()
-        backup_launched = False
-        try:
-            tag, val = result_q.get(timeout=budget)
-        except queue.Empty:
+        threading.Thread(target=wrap("primary", primary),
+                         daemon=True).start()
+        launched, backup_launched = 1, False
+
+        def launch_backup():
+            nonlocal launched, backup_launched
             backup_launched = True
+            launched += 1
             threading.Thread(target=wrap("backup", backup),
                              daemon=True).start()
-            tag, val = result_q.get()
-        if tag.endswith(":error"):
-            raise val
-        dt = time.monotonic() - t0
-        self._record(dt)
-        return TaskResult(val, tag, dt, backup_launched)
+
+        try:
+            tag, ok, val, dt = result_q.get(timeout=budget)
+        except queue.Empty:             # primary straggles → race a backup
+            launch_backup()
+            tag, ok, val, dt = result_q.get()
+        failures = 0
+        while not ok:                   # an error must not win the race
+            failures += 1
+            if not backup_launched:
+                launch_backup()
+            if failures >= launched:
+                raise val               # every launched copy failed
+            tag, ok, val, dt = result_q.get()
+        self._record(dt)                # winner's own latency, not the wall
+        return TaskResult(val, tag, time.monotonic() - t0, backup_launched)
 
 
 class WorkQueue:

@@ -82,8 +82,10 @@ class EdgeSystem:
         return self.manager.submit(workload, args)
 
     def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
-                    speculative: bool = True) -> List[DispatchResult]:
-        return self.manager.submit_many(items, speculative=speculative)
+                    speculative: bool = True,
+                    concurrent: bool = True) -> List[DispatchResult]:
+        return self.manager.submit_many(items, speculative=speculative,
+                                        concurrent=concurrent)
 
     # ------------------------------------------------------------ telemetry
     @property

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a background engine loop.
 
 One decode program (fixed ``max_slots`` batch) advances every active request
 each tick; prefills are bucketed by prompt length so the container-class
@@ -6,6 +6,28 @@ executor compiles a handful of shapes, not one per request.  Inactive slots
 ride along masked (their cache_len doesn't advance; the slot row they write
 is beyond their valid length, hence harmless) — so the engine never
 retraces as requests come and go.
+
+Engine-loop lifecycle
+---------------------
+The engine can run in two modes:
+
+* **caller-driven** (default): nothing steps the engine until someone calls
+  ``step()`` / ``run_until_drained()`` or blocks on a ``RequestHandle`` —
+  ``handle.result()`` drives ticks inline.  Multiple threads may drive
+  concurrently; ticks are serialized under the engine lock, so requests
+  submitted by different threads still share one decode batch.
+* **background loop**: ``start()`` spawns a daemon thread that owns
+  ``step()``.  Callers then only ``submit()`` (returns a ``RequestHandle``)
+  and block on ``handle.result()`` — one request's prefill overlaps another
+  request's decode because the loop admits everything that fits each tick.
+  ``drain()`` waits for queue+active to empty; ``stop()`` (optionally
+  draining first) shuts the thread down.  ``with engine:`` is
+  start/stop(drain=True) sugar.
+
+Requests are validated at ``submit()`` time (empty or over-``max_seq``
+prompts raise ``ValueError`` immediately); anything that fails *inside*
+the loop marks the request failed and surfaces the error through its
+future instead of crashing the loop thread.
 
 SLO-aware admission: requests carry ``latency_slo_ms``; the engine admits
 while slots remain and estimates queue delay for telemetry the autoscaler
@@ -15,7 +37,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
+from concurrent.futures import Future
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -43,8 +67,37 @@ class Request:
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
+    admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    future: Optional["Future[Request]"] = None
+
+
+class RequestHandle:
+    """Caller-side view of a submitted request.
+
+    ``result()`` blocks until the request completes.  When the background
+    loop is running it simply waits on the request's future; otherwise it
+    drives ``engine.step()`` inline (so single-threaded callers and tests
+    need no thread).  A failed request re-raises its error here.
+    """
+
+    def __init__(self, engine: "ServingEngine", req: Request):
+        self._engine = engine
+        self._req = req
+
+    @property
+    def rid(self) -> int:
+        return self._req.rid
+
+    def done(self) -> bool:
+        return self._req.future.done()
+
+    def result(self, timeout: Optional[float] = None) -> Request:
+        if self._engine.loop_running:
+            return self._req.future.result(timeout)
+        return self._engine._drive(self._req, timeout)
 
 
 def _buckets(max_seq: int) -> List[int]:
@@ -71,11 +124,20 @@ class ServingEngine:
         self.buckets = _buckets(max_seq)
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
-        self.completed: List[Request] = []
+        self.completed: Dict[int, Request] = {}      # rid → finished request
+        self.failed: Dict[int, Request] = {}         # rid → failed request
         self.last_tokens = jnp.zeros((max_slots,), jnp.int32)
         self._rid = itertools.count()
         self.ticks = 0
         self.dispatch_stats = DispatchStats()
+
+        # loop lifecycle: the RLock serializes ticks and bookkeeping; the
+        # conditions wake the loop on new work and drainers on each tick
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._tick = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
 
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_fn,
@@ -103,101 +165,255 @@ class ServingEngine:
         new_len = jnp.where(active, cache_len + 1, cache_len)
         return next_tokens, caches, new_len
 
+    # ------------------------------------------------------- loop lifecycle
+    @property
+    def loop_running(self) -> bool:
+        return self._running and self._thread is not None \
+            and self._thread.is_alive()
+
+    def start(self) -> "ServingEngine":
+        """Start the background engine loop (idempotent)."""
+        with self._lock:
+            if self.loop_running:
+                return self
+            self._running = True
+            self._thread = threading.Thread(
+                target=self._loop, name=f"engine-loop-{id(self):x}",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = 30.0):
+        """Stop the loop thread; by default finish in-flight work first."""
+        if drain and self.loop_running:
+            self.drain(timeout=timeout)
+        with self._lock:
+            self._running = False
+            self._work.notify_all()
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+        self._thread = None
+
+    def __enter__(self) -> "ServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop(drain=exc[0] is None)
+
+    def _loop(self):
+        while True:
+            with self._lock:
+                while self._running and not self.queue and not self.active:
+                    self._work.wait(timeout=0.5)
+                if not self._running:
+                    return
+            try:
+                self.step()
+            except Exception:  # noqa: BLE001 — step fails the offending
+                # requests itself; this is a last-resort guard, so back
+                # off rather than hot-spin if something still escapes
+                time.sleep(0.05)
+
+    def drain(self, timeout: Optional[float] = None) -> List[Request]:
+        """Block until the queue and active set are empty."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self.queue or self.active:
+                if not self.loop_running:
+                    self.step()             # no loop → drive inline
+                    continue
+                wait = 0.1 if deadline is None else \
+                    min(0.1, deadline - time.monotonic())
+                if wait <= 0 or not self._tick.wait(timeout=wait):
+                    if deadline is not None and \
+                            time.monotonic() >= deadline:
+                        raise TimeoutError(
+                            f"engine drain timed out: "
+                            f"{len(self.queue)} queued, "
+                            f"{len(self.active)} active")
+            return list(self.completed.values())
+
+    def _drive(self, req: Request, timeout: Optional[float] = None
+               ) -> Request:
+        """Caller-driven mode: step until ``req`` completes (or fails)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not req.future.done():
+            with self._lock:
+                if self.loop_running:       # a loop started mid-wait
+                    break
+                self.step()
+                if not req.future.done() and not self.queue \
+                        and not self.active:
+                    raise RuntimeError(
+                        f"request {req.rid} cannot complete: engine idle")
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(f"request {req.rid} timed out")
+        return req.future.result(timeout)
+
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_token: Optional[int] = None,
-               latency_slo_ms: float = 0.0) -> int:
-        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+               latency_slo_ms: float = 0.0) -> RequestHandle:
+        """Enqueue a request; returns a handle whose ``result()`` blocks.
+
+        Invalid prompts are rejected HERE with ``ValueError`` — never
+        inside the loop thread, where they'd kill the shared loop.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be 1-D, got shape {prompt.shape}")
+        if prompt.size == 0:
+            raise ValueError("empty prompt: prefill needs >= 1 token")
+        if prompt.size > self.max_seq:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds max_seq "
+                f"{self.max_seq}")
+        req = Request(next(self._rid), prompt,
                       max_new_tokens, eos_token, latency_slo_ms,
-                      submitted_at=time.monotonic())
-        self.queue.append(req)
-        return req.rid
+                      submitted_at=time.monotonic(), future=Future())
+        with self._lock:
+            self.queue.append(req)
+            self._work.notify_all()
+        return RequestHandle(self, req)
+
+    def _fail(self, req: Request, err: Exception):
+        req.done = True
+        req.error = str(err)
+        req.finished_at = time.monotonic()
+        self.failed[req.rid] = req
+        if req.future is not None and not req.future.done():
+            req.future.set_exception(err)
+        self._tick.notify_all()
 
     def _admit(self):
         while self.queue and self.kv.free_slots:
             req = self.queue.pop(0)
-            slot = self.kv.alloc()
             plen = len(req.prompt)
-            bucket = plen if self._stateful else next(
-                b for b in self.buckets if b >= plen)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :plen] = req.prompt
-            logits, pcache, _ = self._prefill(
-                self.params, jnp.asarray(padded),
-                jnp.asarray([plen - 1], jnp.int32), bucket=bucket)
-            # prefill yields the FIRST generated token; decode does the rest
-            first = int(np.asarray(jnp.argmax(logits, -1))[0])
-            self.kv.insert(pcache, slot, plen)
-            self.last_tokens = self.last_tokens.at[slot].set(first)
+            # requests normally can't get here invalid (submit validates),
+            # but a bad item must fail its future, not crash the loop
+            if plen == 0 or plen > self.max_seq:
+                self._fail(req, ValueError(
+                    f"prompt length {plen} outside (0, {self.max_seq}]"))
+                continue
+            slot = self.kv.alloc()
+            try:
+                bucket = plen if self._stateful else next(
+                    b for b in self.buckets if b >= plen)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :plen] = req.prompt
+                logits, pcache, _ = self._prefill(
+                    self.params, jnp.asarray(padded),
+                    jnp.asarray([plen - 1], jnp.int32), bucket=bucket)
+                # prefill yields the FIRST generated token; decode the rest
+                first = int(np.asarray(jnp.argmax(logits, -1))[0])
+                self.kv.insert(pcache, slot, plen)
+                self.last_tokens = self.last_tokens.at[slot].set(first)
+            except Exception as e:  # noqa: BLE001
+                self.kv.free(slot)
+                self._fail(req, e)
+                continue
             req.slot = slot
             req.generated.append(first)
-            req.first_token_at = time.monotonic()
+            req.admitted_at = req.first_token_at = time.monotonic()
             self.active[req.rid] = req
             if (req.eos_token is not None and first == req.eos_token) or \
                     req.max_new_tokens <= 1:
                 self._finish(req, req.first_token_at)
 
     def step(self) -> int:
-        """One engine tick: admit + one decode for all active slots."""
-        self._admit()
-        if not self.active:
-            return 0
-        active_mask = np.zeros((self.max_slots,), bool)
-        for req in self.active.values():
-            active_mask[req.slot] = True
-        tokens, self.kv.caches, self.kv.cache_len = self._decode(
-            self.params, self.kv.caches, self.last_tokens,
-            self.kv.cache_len, jnp.asarray(active_mask))
-        self.last_tokens = tokens
-        toks = np.asarray(tokens)
-        now = time.monotonic()
-        finished = []
-        for req in self.active.values():
-            t = int(toks[req.slot])
-            req.generated.append(t)
-            if req.first_token_at is None:
-                req.first_token_at = now
-            if (req.eos_token is not None and t == req.eos_token) or \
-                    len(req.generated) >= req.max_new_tokens or \
-                    int(self.kv.cache_len[req.slot]) >= self.kv.max_seq - 1:
-                finished.append(req)
-        for req in finished:
-            self._finish(req, now)
-        self.ticks += 1
-        return len(self.active)
+        """One engine tick: admit + one decode for all active slots.
+
+        Thread-safe: the whole tick runs under the engine lock, so exactly
+        one tick advances at a time whether it's the background loop or a
+        caller-driven thread stepping.
+        """
+        with self._lock:
+            self._admit()
+            if not self.active:
+                self._tick.notify_all()
+                return 0
+            active_mask = np.zeros((self.max_slots,), bool)
+            for req in self.active.values():
+                active_mask[req.slot] = True
+            try:
+                tokens, self.kv.caches, self.kv.cache_len = self._decode(
+                    self.params, self.kv.caches, self.last_tokens,
+                    self.kv.cache_len, jnp.asarray(active_mask))
+            except Exception as e:  # noqa: BLE001 — a decode error poisons
+                # the whole batch (caches are donated): fail every active
+                # request so blocked handles surface the error instead of
+                # hanging while the loop re-raises forever
+                for req in list(self.active.values()):
+                    self.kv.free(req.slot)
+                    del self.active[req.rid]
+                    self._fail(req, e)
+                return 0
+            self.last_tokens = tokens
+            toks = np.asarray(tokens)
+            # ONE device sync per tick (not one per request)
+            clens = np.asarray(self.kv.cache_len)
+            now = time.monotonic()
+            finished = []
+            for req in self.active.values():
+                t = int(toks[req.slot])
+                req.generated.append(t)
+                if req.first_token_at is None:
+                    req.first_token_at = now
+                if (req.eos_token is not None and t == req.eos_token) or \
+                        len(req.generated) >= req.max_new_tokens or \
+                        int(clens[req.slot]) >= self.kv.max_seq - 1:
+                    finished.append(req)
+            for req in finished:
+                self._finish(req, now)
+            self.ticks += 1
+            self._tick.notify_all()
+            return len(self.active)
 
     def _finish(self, req: Request, now: float):
         req.done = True
         req.finished_at = now
         self.kv.free(req.slot)
         del self.active[req.rid]
-        self.completed.append(req)
+        self.completed[req.rid] = req
         self.dispatch_stats.record(DispatchSample(
             workload=f"request-{req.rid}", workload_class="heavy",
             executor_class="container", executor="serving-engine",
             node="local", wall_s=now - req.submitted_at, cold=False,
             footprint_bytes=0))
+        if req.future is not None and not req.future.done():
+            req.future.set_result(req)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        if self.loop_running:
+            return self.drain()
         for _ in range(max_ticks):
-            if not self.queue and not self.active:
-                break
+            with self._lock:
+                if not self.queue and not self.active:
+                    break
             self.step()
-        return list(self.completed)
+        return list(self.completed.values())
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        out = {
-            "ticks": self.ticks,
-            "active": len(self.active),
-            "queued": len(self.queue),
-            "slot_utilization": self.kv.utilization(),
-        }
-        ttfts = [r.first_token_at - r.submitted_at for r in self.completed
+        with self._lock:
+            done = list(self.completed.values())
+            out = {
+                "ticks": self.ticks,
+                "active": len(self.active),
+                "queued": len(self.queue),
+                "failed": len(self.failed),
+                "slot_utilization": self.kv.utilization(),
+            }
+        ttfts = [r.first_token_at - r.submitted_at for r in done
                  if r.first_token_at is not None]
-        walls = [r.finished_at - r.submitted_at for r in self.completed
+        queued = [r.admitted_at - r.submitted_at for r in done
+                  if r.admitted_at is not None]
+        walls = [r.finished_at - r.submitted_at for r in done
                  if r.finished_at is not None]
-        for name, xs in (("ttft_s", ttfts), ("request_wall_s", walls)):
+        for name, xs in (("ttft_s", ttfts), ("queue_s", queued),
+                         ("request_wall_s", walls)):
             if xs:
                 for q in (50, 95, 99):
                     out[f"p{q}_{name}"] = percentile(xs, q)
@@ -209,43 +425,58 @@ class EngineExecutor(BaseExecutor):
     serving deployment is declared through ``ServiceSpec``/``EdgeSystem``
     like every other service.
 
-    ``dispatch`` submits the prompt and steps the SHARED engine until that
-    request completes — requests submitted earlier ride along in the same
-    decode batch, so batching is preserved when callers enqueue several
-    prompts before draining.
+    ``dispatch`` submits the prompt and blocks on the request's handle:
+    with the background loop running (``autostart=True`` starts it on
+    first dispatch), concurrent dispatches from different threads batch in
+    the shared engine — one request's prefill overlaps another's decode.
+    Without a loop, the handle drives ticks inline (still lock-serialized,
+    so concurrent callers share the decode batch either way).
     """
 
     executor_class = ExecutorClass.CONTAINER
 
-    def __init__(self, name: str, engine: ServingEngine, mesh=None):
+    def __init__(self, name: str, engine: ServingEngine, mesh=None,
+                 autostart: bool = True,
+                 result_timeout: Optional[float] = 120.0):
         super().__init__(name, mesh)
         self.engine = engine
+        self.autostart = autostart
+        self.result_timeout = result_timeout
+        # params and cache shapes are fixed at engine init — size them once,
+        # not on every dispatch (the manager records footprint per sample)
+        self._footprint = sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves((self.engine.params,
+                                      self.engine.kv.caches)))
 
     def footprint_bytes(self) -> int:
-        params = sum(x.size * x.dtype.itemsize
-                     for x in jax.tree.leaves(self.engine.params))
-        kv = sum(x.size * x.dtype.itemsize
-                 for x in jax.tree.leaves(self.engine.kv.caches))
-        return params + kv
+        return self._footprint
 
     def can_run(self, workload: Workload, args) -> bool:
-        return workload.kind in (WorkloadKind.PREFILL, WorkloadKind.DECODE,
-                                 WorkloadKind.GENERIC)
+        if workload.kind not in (WorkloadKind.PREFILL, WorkloadKind.DECODE,
+                                 WorkloadKind.GENERIC):
+            return False
+        if len(args) != 1:           # dispatch unpacks exactly one prompt
+            return False
+        try:
+            a = np.asarray(args[0])
+        except Exception:  # noqa: BLE001
+            return False
+        return a.ndim == 1 and np.issubdtype(a.dtype, np.integer)
 
     def dispatch(self, workload: Workload, args):
         (prompt,) = args
         t0 = time.monotonic()
+        if self.autostart:
+            self.engine.start()
         self.inflight += 1
         try:
-            rid = self.engine.submit(
+            handle = self.engine.submit(
                 prompt, max_new_tokens=max(workload.seq_len, 1),
                 latency_slo_ms=workload.latency_slo_ms)
-            while not any(r.rid == rid for r in self.engine.completed):
-                if self.engine.step() == 0 and not self.engine.queue:
-                    break
+            req = handle.result(timeout=self.result_timeout)
         finally:
             self.inflight -= 1
-        req = next(r for r in self.engine.completed if r.rid == rid)
         self.history.append(DispatchRecord(workload.name,
                                            time.monotonic() - t0, False))
         return req

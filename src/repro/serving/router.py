@@ -120,15 +120,22 @@ def make_stream_container_builder(scfg: stream_lib.StreamConfig):
 
 
 def make_engine_builder(cfg, max_slots: int = 4, max_seq: int = 128,
-                        params=None, seed: int = 0):
+                        params=None, seed: int = 0, autostart: bool = True):
     """Container-class: a continuous-batching ``ServingEngine`` wrapped as
-    an executor, so serving deployments go through ``ServiceSpec`` too."""
+    an executor, so serving deployments go through ``ServiceSpec`` too.
+
+    With ``autostart=True`` (default) the executor starts the engine's
+    background loop on first dispatch — concurrent ``submit_many``
+    dispatches then batch in one decode loop instead of serializing whole
+    requests; ``autostart=False`` keeps the engine caller-driven (each
+    blocked ``dispatch`` steps the shared engine inline)."""
     from repro.serving.engine import EngineExecutor, ServingEngine
 
     def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
         engine = ServingEngine(cfg, max_slots=max_slots, max_seq=max_seq,
                                params=params, seed=seed, mesh=mesh)
-        ex = EngineExecutor(f"engine[{cfg.name}]", engine, mesh=mesh)
+        ex = EngineExecutor(f"engine[{cfg.name}]", engine, mesh=mesh,
+                            autostart=autostart)
         return ex, ex.footprint_bytes()
 
     return builder
