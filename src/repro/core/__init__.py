@@ -8,6 +8,8 @@ Public surface:
     ServiceSpec, ConfigurationManager, EdgeSystem        — fig 2
     DispatchStats, DispatchSample                        — telemetry
 """
+from repro.core.admission import (AdmissionController, AdmissionDecision,
+                                  AdmissionError, TenantQuota, can_preempt)
 from repro.core.executor import (BaseExecutor, ContainerExecutor,
                                  ExecutableImage, ExecutorClass,
                                  IncompatibleWorkload, UnikernelExecutor)
@@ -18,20 +20,23 @@ from repro.core.orchestrator import (BinPackPolicy, Deployment,
                                      POLICIES)
 from repro.core.registry import ImageRegistry
 from repro.core.resources import NodeCapacity, ResourceMonitor
-from repro.core.scheduler import SpeculativeRunner, WorkQueue
-from repro.core.spec import ServiceSpec, auto_spec
+from repro.core.scheduler import SpeculativeRunner, WorkQueue, clone_args
+from repro.core.spec import QOS_RANK, QoSClass, ServiceSpec, auto_spec
 from repro.core.system import EdgeSystem
 from repro.core.telemetry import DispatchSample, DispatchStats, percentile
 from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
                                  WorkloadKind, classify)
 
 __all__ = [
-    "BaseExecutor", "ContainerExecutor", "ExecutableImage", "ExecutorClass",
-    "IncompatibleWorkload", "UnikernelExecutor", "ConfigurationManager",
-    "DispatchResult", "Deployment", "Orchestrator", "PlacementError",
-    "RoundRobinPolicy", "LeastLoadedPolicy", "BinPackPolicy", "POLICIES",
-    "ImageRegistry", "NodeCapacity", "ResourceMonitor", "SpeculativeRunner",
-    "WorkQueue", "ServiceSpec", "auto_spec", "EdgeSystem", "DispatchSample",
-    "DispatchStats", "percentile", "ClassifierConfig", "Workload",
-    "WorkloadClass", "WorkloadKind", "classify",
+    "AdmissionController", "AdmissionDecision", "AdmissionError",
+    "TenantQuota", "can_preempt", "BaseExecutor", "ContainerExecutor",
+    "ExecutableImage", "ExecutorClass", "IncompatibleWorkload",
+    "UnikernelExecutor", "ConfigurationManager", "DispatchResult",
+    "Deployment", "Orchestrator", "PlacementError", "RoundRobinPolicy",
+    "LeastLoadedPolicy", "BinPackPolicy", "POLICIES", "ImageRegistry",
+    "NodeCapacity", "ResourceMonitor", "SpeculativeRunner", "WorkQueue",
+    "clone_args", "QOS_RANK", "QoSClass", "ServiceSpec", "auto_spec",
+    "EdgeSystem", "DispatchSample", "DispatchStats", "percentile",
+    "ClassifierConfig", "Workload", "WorkloadClass", "WorkloadKind",
+    "classify",
 ]

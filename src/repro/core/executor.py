@@ -109,6 +109,12 @@ class BaseExecutor:
         self.history: list[DispatchRecord] = []
         self.inflight = 0
 
+    @property
+    def donates_inputs(self) -> bool:
+        """True when dispatch consumes caller buffers (donated args) — the
+        manager then clones args before racing a speculative backup."""
+        return False
+
     def footprint_bytes(self) -> int:
         raise NotImplementedError
 
@@ -177,6 +183,10 @@ class UnikernelExecutor(BaseExecutor):
     def __init__(self, name: str, image: ExecutableImage, mesh=None):
         super().__init__(name, mesh)
         self.image = image
+
+    @property
+    def donates_inputs(self) -> bool:
+        return bool(self.image.donated_argnums)
 
     def footprint_bytes(self) -> int:
         return self.image.footprint_bytes

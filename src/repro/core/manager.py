@@ -11,23 +11,32 @@ in their background loop) with speculative backup dispatch on straggling
 replicas.  All telemetry flows into a structured ``DispatchStats`` that
 benchmarks and serving consume.
 
+Every resource decision — instance placement and per-request FLOP
+admission — routes through the orchestrator's ``AdmissionController``:
+dispatches are charged to the serving spec's tenant, ``submit_many``
+starts items in QoS order (GUARANTEED before BEST_EFFORT), and
+``autoscale_slo`` scales on observed p95 vs the spec's latency SLO.
+
 Builders: the model/serving layers register how to construct executors for
 a (kind, class) pair; the manager stays application-agnostic.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.admission import AdmissionError
 from repro.core.executor import BaseExecutor, ExecutorClass
 from repro.core.orchestrator import Deployment, Orchestrator, PlacementError
 from repro.core.registry import ImageRegistry
-from repro.core.scheduler import SpeculativeRunner, WorkQueue
-from repro.core.spec import EXECUTOR_FOR_CLASS, ServiceSpec, auto_spec
-from repro.core.telemetry import DispatchSample, DispatchStats
+from repro.core.scheduler import SpeculativeRunner, WorkQueue, clone_args
+from repro.core.spec import (EXECUTOR_FOR_CLASS, QOS_RANK, QoSClass,
+                             ServiceSpec, auto_spec)
+from repro.core.telemetry import DispatchSample, DispatchStats, percentile
 from repro.core.workload import (ClassifierConfig, Workload, WorkloadClass,
                                  classify)
 
@@ -54,6 +63,7 @@ class ConfigurationManager:
                  runner: Optional[SpeculativeRunner] = None,
                  queue: Optional[WorkQueue] = None):
         self.orchestrator = orchestrator
+        self.admission = orchestrator.admission   # the ONE resource gate
         self.registry = registry or ImageRegistry()
         self.classifier = classifier
         self.runner = runner or SpeculativeRunner()
@@ -127,6 +137,59 @@ class ConfigurationManager:
                 self.specs[service] = self.specs[service].with_replicas(n)
             return n
 
+    def autoscale_slo(self, service: str, min_n: int = 1,
+                      max_n: int = 64, window: int = 64) -> int:
+        """Tail-latency-driven scaling: observed p95 vs the spec's SLO.
+
+        The observation is the worse of (a) the p95 dispatch wall over the
+        service's most recent ``window`` samples — a window, not all-time,
+        so a transient slowdown (cold compiles, failover) stops driving
+        scale-ups once latency recovers — and (b) ``p95_queue_s`` from any
+        engine-backed replica's ``ServingEngine.stats()``.  Over SLO →
+        scale up proportionally (observed/SLO); under half the SLO → shed
+        one replica (the paper: scale-down conserves energy).  Scale-ups
+        past available capacity stop where placement stops — best-effort,
+        like failover.
+        """
+        with self._route_lock:
+            spec = self.specs.get(service)
+            if spec is None:
+                raise PlacementError(f"unknown service {service!r}")
+            instances = self.orchestrator.instances(service)
+            n = len(instances)
+            slo_s = spec.latency_slo_ms / 1e3
+            if slo_s <= 0:
+                return n
+            walls = [s.wall_s
+                     for s in self.stats.samples_for(service=service)]
+            walls = walls[-window:]
+            observed = percentile(walls, 95) if walls else 0.0
+            for dep in instances:
+                engine = getattr(dep.executor, "engine", None)
+                if engine is not None:
+                    observed = max(observed,
+                                   engine.stats().get("p95_queue_s", 0.0))
+            if not observed > 0:                  # no data yet (or NaN)
+                return n
+            if observed > slo_s:
+                target = min(max_n,
+                             max(n + 1, math.ceil(n * observed / slo_s)))
+            elif observed < slo_s / 2 and n > min_n:
+                target = n - 1
+            else:
+                return n
+            try:
+                return self.scale(service, target)
+            except PlacementError:
+                # capacity ran out mid scale-up: keep what deployed and
+                # re-sync the stored replica counts to reality
+                n_now = len(self.orchestrator.instances(service))
+                rec = self.orchestrator.services.get(service)
+                if rec is not None:
+                    rec.spec = rec.spec.with_replicas(n_now)
+                self.specs[service] = spec.with_replicas(n_now)
+                return n_now
+
     # ------------------------------------------------------------------
     def _candidates(self, eclass: ExecutorClass, workload: Workload,
                     args: Tuple) -> List[Deployment]:
@@ -176,18 +239,31 @@ class ConfigurationManager:
             executor_class=dep.executor.executor_class.value,
             executor=dep.executor.name, node=dep.node_id, wall_s=wall,
             cold=fresh, footprint_bytes=dep.executor.footprint_bytes(),
-            winner=winner, backup_launched=backup_launched))
+            winner=winner, backup_launched=backup_launched,
+            service=dep.service, tenant=dep.spec.tenant))
 
     def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
         t0 = time.monotonic()
         with self._route_lock:
             deps, wclass, fresh = self._route_or_apply(workload, args)
         dep = deps[0]
-        out = dep.executor.dispatch(workload, args)
+        flops = workload.flops()
+        decision = self.admission.admit_dispatch(dep.spec, flops)
+        if not decision.admitted:
+            raise AdmissionError(decision.reason)
+        try:
+            out = dep.executor.dispatch(workload, args)
+        finally:
+            self.admission.release_dispatch(dep.spec, flops)
         wall = time.monotonic() - t0
         self._record(workload, wclass, dep, wall, fresh)
         return DispatchResult(out, wclass, dep.executor.name, dep.node_id,
                               wall, fresh, service=dep.service)
+
+    @staticmethod
+    def _speculation_donates(*deps: Deployment) -> bool:
+        return any(d.spec.donates_inputs or d.executor.donates_inputs
+                   for d in deps if d is not None)
 
     def _dispatch_one(self, workload: Workload, args: Tuple,
                       speculative: bool) -> DispatchResult:
@@ -195,16 +271,33 @@ class ConfigurationManager:
         with self._route_lock:
             deps, wclass, fresh = self._route_or_apply(workload, args)
         primary, backup = deps[0], deps[1] if len(deps) > 1 else None
+        flops = workload.flops()
+        decision = self.admission.admit_dispatch(primary.spec, flops)
+        if not decision.admitted:
+            raise AdmissionError(decision.reason)
         # bind workload/args as defaults: a losing speculative thread
         # can outlive this call and must not see later items
         backup_fn = None
         if speculative and backup is not None:
-            backup_fn = (lambda _d=backup, _w=workload, _a=args:
-                         _d.executor.dispatch(_w, _a))
-        task = self.runner.run(
-            lambda _d=primary, _w=workload, _a=args:
-            _d.executor.dispatch(_w, _a),
-            backup=backup_fn)
+            # donated-input executors consume caller buffers: the backup
+            # copy must run on a CLONE taken before the primary launches,
+            # never on the same args (unclonable args → no speculation)
+            backup_args = args
+            if self._speculation_donates(primary, backup):
+                try:
+                    backup_args = clone_args(args)
+                except Exception:  # noqa: BLE001
+                    backup_args = None
+            if backup_args is not None:
+                backup_fn = (lambda _d=backup, _w=workload, _a=backup_args:
+                             _d.executor.dispatch(_w, _a))
+        try:
+            task = self.runner.run(
+                lambda _d=primary, _w=workload, _a=args:
+                _d.executor.dispatch(_w, _a),
+                backup=backup_fn)
+        finally:
+            self.admission.release_dispatch(primary.spec, flops)
         dep = backup if task.winner == "backup" else primary
         wall = time.monotonic() - t0
         self._record(workload, wclass, dep, wall, fresh,
@@ -214,9 +307,26 @@ class ConfigurationManager:
             task.value, wclass, dep.executor.name, dep.node_id, wall,
             fresh, service=dep.service, winner=task.winner)
 
+    def _qos_key(self, workload: Workload, args: Tuple) -> Tuple[int, int]:
+        """Admission-ordering key for a queued item: the QoS rank of the
+        spec that will serve it (stronger class first, then higher
+        priority; unroutable items sort as default BURSTABLE)."""
+        eclass = EXECUTOR_FOR_CLASS[self.route(workload)]
+        with self._route_lock:
+            deps = self._candidates(eclass, workload, args)
+            if not deps:
+                other = (ExecutorClass.UNIKERNEL
+                         if eclass is ExecutorClass.CONTAINER
+                         else ExecutorClass.CONTAINER)
+                deps = self._candidates(other, workload, args)
+        if not deps:
+            return (QOS_RANK[QoSClass.BURSTABLE], 0)
+        return deps[0].spec.admission_rank()
+
     def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
                     speculative: bool = True, concurrent: bool = True,
-                    max_workers: int = 16) -> List[DispatchResult]:
+                    max_workers: int = 16,
+                    return_exceptions: bool = False) -> List[Any]:
         """Batched dispatch through the work queue.
 
         With ``concurrent=True`` (default) every item is dispatched before
@@ -230,10 +340,23 @@ class ConfigurationManager:
         past the runner's latency budget, a backup copy races on the
         next-least-inflight instance and the first completion wins.
 
-        Note: speculative copies re-dispatch the same args — only safe for
-        executors without donated input buffers (the manager never races
-        two copies on the SAME instance, but donation invalidates caller
-        buffers across instances too).
+        Dispatch is QoS-ordered, not FIFO: items are started in
+        ``(QoS class, -priority)`` order of the spec that will serve them,
+        so a flood of BEST_EFFORT arrivals cannot starve a GUARANTEED
+        tenant's items in the same batch.  Results still come back in the
+        caller's item order.
+
+        Speculative copies are donation-safe: when either racing executor
+        donates its input buffers (unikernel images) or the spec is marked
+        ``donates_inputs``, the backup runs on a clone of the args taken
+        before the primary launches.
+
+        Quota refusals are a steady-state event for quota-bound tenants:
+        with ``return_exceptions=True`` a refused (or failed) item yields
+        its exception at that position instead of aborting the batch — the
+        other tenants' results survive.  With the default ``False``, every
+        dispatched item still runs to completion before the first error is
+        re-raised (no work is silently cancelled mid-flight).
         """
         # put+get atomically: two concurrent batches must not interleave
         # each other's queue round-trip, and the queue is drained of
@@ -248,14 +371,35 @@ class ConfigurationManager:
                 raise TypeError(
                     f"work queue item {item!r} is not a (Workload, args) "
                     f"pair — the system queue carries dispatchable work")
+        # stable QoS sort: FIFO within one (class, priority) level
+        order = sorted(range(len(work)),
+                       key=lambda i: (self._qos_key(*work[i]), i))
+        results: List[Any] = [None] * len(work)
+        first_error: Optional[Exception] = None
         if concurrent and len(work) > 1:
             with ThreadPoolExecutor(
                     max_workers=min(len(work), max_workers),
                     thread_name_prefix="submit-many") as pool:
-                return list(pool.map(
-                    lambda it: self._dispatch_one(it[0], it[1], speculative),
-                    work))
-        return [self._dispatch_one(w, a, speculative) for w, a in work]
+                futures = [(i, pool.submit(self._dispatch_one, work[i][0],
+                                           work[i][1], speculative))
+                           for i in order]
+                for i, fut in futures:
+                    try:
+                        results[i] = fut.result()
+                    except Exception as e:  # noqa: BLE001
+                        results[i] = e
+                        first_error = first_error or e
+        else:
+            for i in order:
+                try:
+                    results[i] = self._dispatch_one(work[i][0], work[i][1],
+                                                    speculative)
+                except Exception as e:  # noqa: BLE001
+                    results[i] = e
+                    first_error = first_error or e
+        if first_error is not None and not return_exceptions:
+            raise first_error
+        return results
 
     # ------------------------------------------------------------------
     def report(self) -> Dict[str, Any]:
@@ -268,4 +412,6 @@ class ConfigurationManager:
                       "depth": self.queue.depth()},
             "registry": self.registry.stats(),
             "nodes": self.orchestrator.load_report(),
+            "tenants": {"usage": self.admission.tenant_usage(),
+                        "latency": self.stats.per_tenant()},
         }

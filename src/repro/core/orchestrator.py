@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core.admission import AdmissionController, Victim, can_preempt
 from repro.core.executor import BaseExecutor
 from repro.core.resources import NodeCapacity, ResourceMonitor
 from repro.core.spec import ServiceSpec
@@ -59,11 +60,20 @@ class ServiceRecord:
 # --------------------------------------------------------------------------
 
 class PlacementPolicy:
+    """Policies score nodes through the admission controller (``monitor``
+    here is an ``AdmissionController`` in normal operation — its ``fits``
+    is tenant-quota-aware when a ``spec`` is supplied; a bare
+    ``ResourceMonitor`` also satisfies the same call shape)."""
     name = "base"
 
-    def pick(self, nodes: List[Node], monitor: ResourceMonitor,
-             footprint: int) -> Optional[str]:
+    def pick(self, nodes: List[Node], monitor, footprint: int,
+             spec: Optional[ServiceSpec] = None) -> Optional[str]:
         raise NotImplementedError
+
+    @staticmethod
+    def _live(nodes, monitor, footprint, spec):
+        return [n for n in nodes if n.healthy
+                and monitor.fits(n.node_id, footprint, spec)]
 
 
 class RoundRobinPolicy(PlacementPolicy):
@@ -78,9 +88,8 @@ class RoundRobinPolicy(PlacementPolicy):
     def __init__(self):
         self._idx = 0
 
-    def pick(self, nodes, monitor, footprint):
-        live = [n for n in nodes if n.healthy
-                and monitor.fits(n.node_id, footprint)]
+    def pick(self, nodes, monitor, footprint, spec=None):
+        live = self._live(nodes, monitor, footprint, spec)
         if not live:
             return None
         node = live[self._idx % len(live)]
@@ -92,9 +101,8 @@ class LeastLoadedPolicy(PlacementPolicy):
     """Most free HBM first (≙ K3s-style load spreading)."""
     name = "least-loaded"
 
-    def pick(self, nodes, monitor, footprint):
-        live = [n for n in nodes if n.healthy
-                and monitor.fits(n.node_id, footprint)]
+    def pick(self, nodes, monitor, footprint, spec=None):
+        live = self._live(nodes, monitor, footprint, spec)
         if not live:
             return None
         return max(live, key=lambda n: monitor.hbm_free(n.node_id)).node_id
@@ -104,9 +112,8 @@ class BinPackPolicy(PlacementPolicy):
     """Tightest fit first — frees whole nodes for scale-down (≙ Nomad)."""
     name = "bin-pack"
 
-    def pick(self, nodes, monitor, footprint):
-        live = [n for n in nodes if n.healthy
-                and monitor.fits(n.node_id, footprint)]
+    def pick(self, nodes, monitor, footprint, spec=None):
+        live = self._live(nodes, monitor, footprint, spec)
         if not live:
             return None
         return min(live, key=lambda n: monitor.hbm_free(n.node_id)).node_id
@@ -125,9 +132,13 @@ class PlacementError(RuntimeError):
 class Orchestrator:
     def __init__(self, policy: Optional[PlacementPolicy] = None,
                  monitor: Optional[ResourceMonitor] = None,
-                 detector: Optional[FailureDetector] = None):
+                 detector: Optional[FailureDetector] = None,
+                 admission: Optional[AdmissionController] = None):
         self.policy = policy or LeastLoadedPolicy()
-        self.monitor = monitor or ResourceMonitor()
+        # every resource decision routes through ONE admission controller;
+        # the raw monitor stays reachable for telemetry snapshots
+        self.admission = admission or AdmissionController(monitor)
+        self.monitor = self.admission.monitor
         self.nodes: Dict[str, Node] = {}
         self.services: Dict[str, ServiceRecord] = {}
         self.deployments: Dict[str, Deployment] = {}
@@ -179,11 +190,52 @@ class Orchestrator:
     def _policy_for(self, rec: ServiceRecord) -> PlacementPolicy:
         return rec.policy or self.policy
 
+    def _victims_on(self, node_id: str, service: str) -> List[Victim]:
+        """Preemption candidates on a node (never the applying service's
+        own instances — a re-apply must not cannibalize itself)."""
+        return [(d.name, d.footprint, d.spec)
+                for d in self.deployments.values()
+                if d.node_id == node_id and d.service != service]
+
+    def _preemption_node(self, spec: ServiceSpec,
+                         footprint: int) -> Optional[str]:
+        """When no node fits outright, find the healthy node where free
+        space plus preemptable (strictly weaker QoS) mass covers the
+        footprint — most reclaimable space first."""
+        best, best_room = None, -1
+        for node in self.nodes.values():
+            if not node.healthy:
+                continue
+            evictable = sum(b for _n, b, vspec in
+                            self._victims_on(node.node_id, spec.name)
+                            if can_preempt(spec, vspec))
+            if evictable == 0:
+                continue
+            room = self.monitor.hbm_free(node.node_id) + evictable
+            if room >= footprint and room > best_room:
+                best, best_room = node.node_id, room
+        return best
+
+    def _evict(self, name: str, preemptor: str):
+        dep = self.deployments.pop(name, None)
+        if dep is not None:
+            self.admission.release(dep.node_id, name)
+            self.events.append(f"preempt {name} (for {preemptor})")
+
     def _deploy_instance(self, rec: ServiceRecord,
                          name: Optional[str] = None) -> Deployment:
         spec = rec.spec
         node_id = self._policy_for(rec).pick(list(self.nodes.values()),
-                                             self.monitor, rec.footprint)
+                                             self.admission, rec.footprint,
+                                             spec)
+        if node_id is None:
+            if not self.admission.has_quota_headroom(spec.tenant,
+                                                     rec.footprint):
+                raise PlacementError(
+                    f"admission refused {spec.name!r}: tenant-quota: "
+                    f"{spec.tenant!r} over hbm_bytes quota")
+            # nothing fits outright — a stronger QoS class may preempt
+            node_id = self._preemption_node(spec, rec.footprint)
         if node_id is None:
             raise PlacementError(
                 f"no healthy node fits {rec.footprint} bytes for "
@@ -191,8 +243,14 @@ class Orchestrator:
         if name is None:
             name = spec.instance_name(rec.next_index)
             rec.next_index += 1
-        if not self.monitor.commit(node_id, name, rec.footprint):
-            raise PlacementError(f"admission race on {node_id} for {name!r}")
+        decision = self.admission.admit_instance(
+            node_id, name, rec.footprint, spec,
+            victims=self._victims_on(node_id, spec.name),
+            evict=lambda victim: self._evict(victim, name))
+        if not decision.admitted:
+            raise PlacementError(
+                f"admission refused {name!r} on {node_id}: "
+                f"{decision.reason}")
         node = self.nodes[node_id]
         if rec.prebuilt is not None and node.mesh is None:
             executor, rec.prebuilt = rec.prebuilt, None
@@ -207,7 +265,7 @@ class Orchestrator:
     def undeploy(self, name: str):
         dep = self.deployments.pop(name, None)
         if dep is not None:
-            self.monitor.release(dep.node_id, name)
+            self.admission.release(dep.node_id, name)
             self.events.append(f"undeploy {name}")
 
     def remove_service(self, service: str):
@@ -232,6 +290,7 @@ class Orchestrator:
             return []
         node.healthy = False
         self.monitor.unregister_node(node_id)
+        self.admission.forget_node(node_id)
         moved = []
         for dep in [d for d in self.deployments.values()
                     if d.node_id == node_id]:

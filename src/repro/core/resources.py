@@ -59,11 +59,26 @@ class ResourceMonitor:
             return cap - used
 
     def hbm_utilization(self, node_id: str) -> float:
-        cap = self.capacity[node_id].hbm_bytes
-        return 1.0 - self.hbm_free(node_id) / cap if cap else 1.0
+        # ONE snapshot under the lock: reading capacity and the committed
+        # sum separately races unregister_node (KeyError mid-failover)
+        with self._lock:
+            node_cap = self.capacity.get(node_id)
+            if node_cap is None:
+                return 1.0
+            cap = node_cap.hbm_bytes
+            used = sum(c.hbm_bytes for c in self.committed[node_id].values())
+        return used / cap if cap else 1.0
 
-    def fits(self, node_id: str, hbm_bytes: int) -> bool:
-        return node_id in self.capacity and self.hbm_free(node_id) >= hbm_bytes
+    def fits(self, node_id: str, hbm_bytes: int, spec=None) -> bool:
+        """``spec`` is accepted (and ignored) so the monitor stays
+        call-compatible with the quota-aware ``AdmissionController.fits``
+        that placement policies normally score against."""
+        with self._lock:
+            node_cap = self.capacity.get(node_id)
+            if node_cap is None:
+                return False
+            used = sum(c.hbm_bytes for c in self.committed[node_id].values())
+            return node_cap.hbm_bytes - used >= hbm_bytes
 
     def commit(self, node_id: str, key: str, hbm_bytes: int) -> bool:
         """Atomic admission: reserve or refuse (paper: avoid overload)."""

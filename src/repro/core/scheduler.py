@@ -23,6 +23,30 @@ class TaskResult:
     backup_launched: bool
 
 
+def clone_args(args: Any) -> Any:
+    """Deep-copy dispatch args so a speculative backup never re-dispatches
+    the same buffers as its primary.
+
+    Donated-input executors (unikernel images built with
+    ``donate_argnums``) invalidate caller buffers on dispatch; racing a
+    backup on the SAME args would hand the backup already-donated memory.
+    Containers (dict/list/tuple) recurse; leaves are copied via their own
+    ``copy()`` (numpy/jax arrays) and anything without one passes through
+    unchanged (ints, strings, configs — safe because immutable or unread
+    by the donating program).
+    """
+    if isinstance(args, tuple):
+        return tuple(clone_args(a) for a in args)
+    if isinstance(args, list):
+        return [clone_args(a) for a in args]
+    if isinstance(args, dict):
+        return {k: clone_args(v) for k, v in args.items()}
+    copy = getattr(args, "copy", None)
+    if callable(copy):
+        return copy()
+    return args
+
+
 class SpeculativeRunner:
     """Run fn on primary; if slow, race a backup copy."""
 

@@ -16,8 +16,11 @@ owns the whole stack and exposes the declarative surface:
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.admission import AdmissionController, TenantQuota
 from repro.core.manager import (BuilderFn, ConfigurationManager,
                                 DispatchResult)
 from repro.core.orchestrator import (Deployment, Orchestrator,
@@ -39,14 +42,20 @@ class EdgeSystem:
                  registry: Optional[ImageRegistry] = None,
                  monitor: Optional[ResourceMonitor] = None,
                  detector: Optional[FailureDetector] = None,
-                 runner: Optional[SpeculativeRunner] = None):
+                 runner: Optional[SpeculativeRunner] = None,
+                 admission: Optional[AdmissionController] = None):
         self.registry = registry or ImageRegistry()
         self.orchestrator = Orchestrator(policy=policy, monitor=monitor,
-                                         detector=detector)
+                                         detector=detector,
+                                         admission=admission)
         self.queue = WorkQueue()
         self.manager = ConfigurationManager(
             self.orchestrator, registry=self.registry, classifier=classifier,
             runner=runner, queue=self.queue)
+
+    @property
+    def admission(self) -> AdmissionController:
+        return self.orchestrator.admission
 
     # -------------------------------------------------------------- cluster
     def add_node(self, node_id: str,
@@ -68,11 +77,77 @@ class EdgeSystem:
     def scale(self, service: str, target: int) -> int:
         return self.manager.scale(service, target)
 
-    def autoscale(self, service: str, per_instance: int,
-                  min_n: int = 1, max_n: int = 64) -> int:
-        """Queue-depth-driven scaling of an applied service."""
+    def autoscale(self, service: str, per_instance: int = 1,
+                  min_n: int = 1, max_n: int = 64,
+                  mode: str = "queue") -> int:
+        """Scale an applied service from load signals.
+
+        ``mode="queue"`` (default) targets ``ceil(queue_depth /
+        per_instance)`` replicas.  ``mode="slo"`` ignores queue depth and
+        scales on tail latency instead: the service's observed p95 (its
+        ``DispatchStats`` samples, plus ``p95_queue_s`` from any
+        engine-backed replica) against ``ServiceSpec.latency_slo_ms``.
+        """
+        if mode == "slo":
+            return self.manager.autoscale_slo(service, min_n=min_n,
+                                              max_n=max_n)
+        if mode != "queue":
+            raise ValueError(f"unknown autoscale mode {mode!r}")
         return self.manager.autoscale(service, self.queue.depth(),
                                       per_instance, min_n=min_n, max_n=max_n)
+
+    def set_tenant_quota(self, tenant: str,
+                         hbm_bytes: Optional[int] = None,
+                         flops_inflight: Optional[float] = None
+                         ) -> "EdgeSystem":
+        """Cap a tenant's committed instance HBM and in-flight dispatch
+        FLOPs (``None`` = unlimited; see ``core.admission``)."""
+        self.admission.set_quota(
+            tenant, TenantQuota(hbm_bytes=hbm_bytes,
+                                flops_inflight=flops_inflight))
+        return self
+
+    # ---------------------------------------------------------- persistence
+    def save_state(self, path: str) -> Dict[str, Any]:
+        """Serialize applied specs + tenant quotas to ``path`` (JSON).
+
+        This is the durable half of the paper's configuration-manager
+        restart story: everything declarative survives; builders are code
+        and re-register on boot.
+        """
+        with self.manager._route_lock:
+            specs = [spec.to_dict() for spec in self.manager.specs.values()]
+        quotas = {t: {"hbm_bytes": q.hbm_bytes,
+                      "flops_inflight": q.flops_inflight}
+                  for t, q in self.admission.quota_snapshot().items()}
+        state = {"version": 1, "specs": specs, "quotas": quotas}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return state
+
+    def restore(self, path: str) -> List[str]:
+        """Re-apply every persisted spec (and quota) on a fresh system.
+
+        Call after nodes are added and builders registered — the restored
+        manager re-applies each spec, which reconciles every service back
+        to ``spec.replicas``.  GUARANTEED specs are applied first so a
+        shrunken cluster degrades the weakest QoS class, not the paper's
+        critical path.  Returns the applied service names.
+        """
+        with open(path) as f:
+            state = json.load(f)
+        for tenant, q in state.get("quotas", {}).items():
+            self.admission.set_quota(tenant, TenantQuota(
+                hbm_bytes=q.get("hbm_bytes"),
+                flops_inflight=q.get("flops_inflight")))
+        specs = [ServiceSpec.from_dict(d) for d in state.get("specs", [])]
+        applied = []
+        for spec in sorted(specs, key=lambda s: s.admission_rank()):
+            self.apply(spec)
+            applied.append(spec.name)
+        return applied
 
     def instances(self, service: str) -> List[Deployment]:
         return self.orchestrator.instances(service)
@@ -82,10 +157,11 @@ class EdgeSystem:
         return self.manager.submit(workload, args)
 
     def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
-                    speculative: bool = True,
-                    concurrent: bool = True) -> List[DispatchResult]:
+                    speculative: bool = True, concurrent: bool = True,
+                    return_exceptions: bool = False) -> List[Any]:
         return self.manager.submit_many(items, speculative=speculative,
-                                        concurrent=concurrent)
+                                        concurrent=concurrent,
+                                        return_exceptions=return_exceptions)
 
     # ------------------------------------------------------------ telemetry
     @property

@@ -41,6 +41,8 @@ class DispatchSample:
     footprint_bytes: int
     winner: str = "primary"        # "primary" | "backup"
     backup_launched: bool = False
+    service: str = ""              # owning ServiceSpec name ("" = ad-hoc)
+    tenant: str = ""               # owning spec's tenant ("" = unattributed)
 
 
 class DispatchStats:
@@ -57,6 +59,14 @@ class DispatchStats:
     def __len__(self) -> int:
         with self._lock:
             return len(self.samples)
+
+    def samples_for(self, service: Optional[str] = None,
+                    tenant: Optional[str] = None) -> List[DispatchSample]:
+        """Snapshot of samples filtered by service and/or tenant."""
+        with self._lock:
+            return [s for s in self.samples
+                    if (service is None or s.service == service)
+                    and (tenant is None or s.tenant == tenant)]
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -108,6 +118,15 @@ class DispatchStats:
                 "wins": sum(1 for s in backups if s.winner == "backup"),
             },
         }
+
+    def per_tenant(self) -> Dict[str, Dict[str, float]]:
+        """Latency summary split by tenant — the QoS fairness report the
+        fig7 benchmark and ``EdgeSystem.report`` surface."""
+        with self._lock:
+            samples = list(self.samples)
+        tenants = sorted({s.tenant for s in samples if s.tenant})
+        return {t: self.summarize([s for s in samples if s.tenant == t])
+                for t in tenants}
 
     # ------------------------------------------------------------------
     @classmethod

@@ -75,6 +75,29 @@ class Workload:
             return 2.0 * n + kv
         return 2.0 * n
 
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind.value,
+            "arch": self.arch.to_dict() if self.arch is not None else None,
+            "batch": self.batch,
+            "seq_len": self.seq_len,
+            "latency_slo_ms": self.latency_slo_ms,
+            "est_flops": self.est_flops,
+            "est_bytes": self.est_bytes,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Workload":
+        arch = d.get("arch")
+        return cls(name=d["name"], kind=WorkloadKind(d["kind"]),
+                   arch=ModelConfig.from_dict(arch) if arch else None,
+                   batch=d.get("batch", 1), seq_len=d.get("seq_len", 1),
+                   latency_slo_ms=d.get("latency_slo_ms", 0.0),
+                   est_flops=d.get("est_flops"),
+                   est_bytes=d.get("est_bytes"))
+
 
 @dataclasses.dataclass(frozen=True)
 class ClassifierConfig:

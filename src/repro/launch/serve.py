@@ -30,11 +30,16 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request latency SLO; every 4th request gets "
+                         "a tight SLO and should jump the queue")
+    ap.add_argument("--save-state", default="",
+                    help="persist applied specs + quotas to this path")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced_config
-    from repro.core import (EdgeSystem, ExecutorClass, ServiceSpec, Workload,
-                            WorkloadClass, WorkloadKind)
+    from repro.core import (EdgeSystem, ExecutorClass, QoSClass, ServiceSpec,
+                            Workload, WorkloadClass, WorkloadKind)
     from repro.serving.router import make_engine_builder
 
     cfg = get_reduced_config(args.arch) if args.reduced \
@@ -51,7 +56,9 @@ def main() -> None:
         name="llm-serving",
         workload=Workload("serve", WorkloadKind.DECODE, cfg,
                           batch=args.slots, seq_len=args.max_new),
-        executor_class=ExecutorClass.CONTAINER)
+        executor_class=ExecutorClass.CONTAINER,
+        tenant="serving", qos=QoSClass.GUARANTEED,
+        latency_slo_ms=args.slo_ms)
     (dep,) = system.apply(spec)
     engine = dep.executor.engine
 
@@ -61,9 +68,12 @@ def main() -> None:
         handles = []
         for i in range(args.requests):
             plen = int(rng.integers(4, args.max_seq // 2))
+            # a tight-SLO request every 4th submission: the engine's
+            # SLO-slack ordering admits these ahead of FIFO arrivals
+            slo = args.slo_ms if (args.slo_ms and i % 4 == 3) else 0.0
             handles.append(engine.submit(
                 rng.integers(0, cfg.vocab_size, size=plen),
-                max_new_tokens=args.max_new))
+                max_new_tokens=args.max_new, latency_slo_ms=slo))
         done = [h.result(timeout=300.0) for h in handles]
     dt = time.monotonic() - t0
     toks = sum(len(r.generated) for r in done)
@@ -87,6 +97,20 @@ def main() -> None:
               f"p50={summary['p50_wall_s'] * 1e3:.1f}ms "
               f"p95={summary['p95_wall_s'] * 1e3:.1f}ms "
               f"p99={summary['p99_wall_s'] * 1e3:.1f}ms")
+
+    if args.slo_ms:
+        slo_reqs = [r for r in done if r.latency_slo_ms > 0]
+        met = sum((r.finished_at - r.submitted_at) * 1e3 <= r.latency_slo_ms
+                  for r in slo_reqs)
+        print(f"  slo: {met}/{len(slo_reqs)} tight-SLO requests "
+              f"within {args.slo_ms:.0f}ms; "
+              f"p95_queue_s={stats.get('p95_queue_s', 0.0) * 1e3:.1f}ms")
+        n = system.autoscale("llm-serving", mode="slo", max_n=4)
+        print(f"  slo-autoscale: engine replicas -> {n}")
+    if args.save_state:
+        system.save_state(args.save_state)
+        print(f"  state saved to {args.save_state} "
+              f"(EdgeSystem.restore re-applies it after a manager restart)")
 
 
 if __name__ == "__main__":

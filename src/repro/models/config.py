@@ -244,6 +244,24 @@ class ModelConfig:
             return 0
         return 2 * self.num_kv_heads * self.head_dim_ * dtype_bytes
 
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-safe dict (tuples become lists; ``from_dict`` restores)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelConfig":
+        d = dict(d)
+        if d.get("mla") is not None:
+            d["mla"] = MLAConfig(**d["mla"])
+        if d.get("moe") is not None:
+            d["moe"] = MoEConfig(**d["moe"])
+        if d.get("ssm") is not None:
+            ssm = dict(d["ssm"])
+            ssm["a_init_range"] = tuple(ssm["a_init_range"])
+            d["ssm"] = SSMConfig(**ssm)
+        return cls(**d)
+
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     """Shrink a config to smoke-test size, preserving family structure."""

@@ -29,9 +29,12 @@ prompts raise ``ValueError`` immediately); anything that fails *inside*
 the loop marks the request failed and surfaces the error through its
 future instead of crashing the loop thread.
 
-SLO-aware admission: requests carry ``latency_slo_ms``; the engine admits
-while slots remain and estimates queue delay for telemetry the autoscaler
-(core.orchestrator.autoscale) consumes.
+SLO-aware admission: requests carry ``latency_slo_ms``; each admission
+pass orders the queue by remaining SLO slack (``slo_slack``) so tight-SLO
+requests jump ahead of slack FIFO arrivals — no-SLO requests keep FIFO
+order among themselves behind every SLO-bearing request that is running
+out of budget.  ``stats()["p95_queue_s"]`` feeds the SLO mode of
+``EdgeSystem.autoscale``.
 """
 from __future__ import annotations
 
@@ -72,6 +75,16 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     future: Optional["Future[Request]"] = None
+
+
+def slo_slack(req: Request, now: float) -> float:
+    """Seconds of SLO budget left before ``req`` busts its latency SLO
+    (already counting time spent queued).  No SLO → infinite slack, so
+    SLO-less requests sort behind every deadline-bearing one and keep
+    their FIFO order among themselves (stable sort)."""
+    if req.latency_slo_ms <= 0:
+        return float("inf")
+    return req.latency_slo_ms / 1e3 - (now - req.submitted_at)
 
 
 class RequestHandle:
@@ -288,6 +301,10 @@ class ServingEngine:
         self._tick.notify_all()
 
     def _admit(self):
+        if len(self.queue) > 1 and self.kv.free_slots:
+            # SLO-slack admission ordering: least remaining budget first
+            now = time.monotonic()
+            self.queue.sort(key=lambda r: slo_slack(r, now))
         while self.queue and self.kv.free_slots:
             req = self.queue.pop(0)
             plen = len(req.prompt)

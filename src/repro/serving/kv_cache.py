@@ -27,13 +27,17 @@ class SlotKVCache:
         self.max_seq = max_seq
         self.caches = transformer.init_cache_tree(cfg, max_slots, max_seq,
                                                   dtype)
-        # probe batch axes: build a 1-slot tree and diff the shapes
-        probe = transformer.init_cache_tree(cfg, 1, max_seq, dtype)
+        # probe batch axes by diffing TWO tiny trees (1 vs 2 slots): O(1)
+        # memory regardless of max_slots — probing against the real cache
+        # would transiently double KV HBM — and well-defined for
+        # max_slots == 1 (where a 1-slot probe has no differing axis)
+        p1 = transformer.init_cache_tree(cfg, 1, max_seq, dtype)
+        p2 = transformer.init_cache_tree(cfg, 2, max_seq, dtype)
         self.batch_axes = jax.tree.map(
-            lambda big, small: next(
-                i for i, (a, b) in enumerate(zip(big.shape, small.shape))
+            lambda two, one: next(
+                i for i, (a, b) in enumerate(zip(two.shape, one.shape))
                 if a != b),
-            self.caches, probe)
+            p2, p1)
         self.free_slots: List[int] = list(range(max_slots))
         self.cache_len = jnp.zeros((max_slots,), jnp.int32)
 

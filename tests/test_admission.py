@@ -1,0 +1,427 @@
+"""QoS control-plane tests: ServiceSpec v2 JSON round-trip, tenant
+quotas + priority-ordered preemption through the AdmissionController,
+save_state/restore re-reconcile, SLO-slack engine queue ordering, SLO-mode
+autoscale, donation-safe speculation, and the noisy-BEST_EFFORT-tenant-
+cannot-starve-GUARANTEED guarantee under ``submit_many``."""
+import itertools
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionController, AdmissionError, BaseExecutor,
+                        EdgeSystem, ExecutorClass, NodeCapacity,
+                        PlacementError, QoSClass, ServiceSpec,
+                        SpeculativeRunner, TenantQuota, Workload,
+                        WorkloadClass, WorkloadKind, clone_args)
+from repro.core.executor import DispatchRecord
+
+
+class ToyExecutor(BaseExecutor):
+    """Pure-python executor: deterministic, optional delay/block, optional
+    name-prefix routing, records the global dispatch order."""
+
+    executor_class = ExecutorClass.CONTAINER
+    dispatch_log = []                     # (executor, workload) in order
+
+    def __init__(self, name, mesh=None, delay=0.0, accepts=None,
+                 gate: threading.Event = None, mutate=False):
+        super().__init__(name, mesh)
+        self.delay = delay
+        self.accepts = accepts
+        self.gate = gate
+        self.mutate = mutate
+
+    def footprint_bytes(self):
+        return 10
+
+    def can_run(self, workload, args):
+        return self.accepts is None or workload.name.startswith(self.accepts)
+
+    def dispatch(self, workload, args):
+        self.inflight += 1
+        try:
+            ToyExecutor.dispatch_log.append((self.name, workload.name))
+            seen = tuple(np.asarray(a).copy() for a in args
+                         if isinstance(a, np.ndarray))
+            if self.mutate and args:          # simulate donated buffers
+                args[0][:] = -1
+            if self.gate is not None:
+                self.gate.wait(timeout=10.0)
+            if self.delay:
+                time.sleep(self.delay)
+            self.history.append(DispatchRecord(workload.name, self.delay,
+                                               False))
+            return (self.name, workload.name, seen)
+        finally:
+            self.inflight -= 1
+
+
+def _toy_builder(delays=(0.0,), gates=None, mutate_first=False):
+    counter = itertools.count()
+
+    def builder(workload, mesh):
+        i = next(counter)
+        gate = gates[i] if gates and i < len(gates) else None
+        ex = ToyExecutor(f"toy[{workload.name}]{i}", mesh=mesh,
+                         delay=delays[i % len(delays)],
+                         accepts=workload.name, gate=gate,
+                         mutate=mutate_first and i == 0)
+        return ex, 10
+    return builder
+
+
+def _system(n_nodes=3, hbm=1000, builder=None, runner=None):
+    system = EdgeSystem(runner=runner)
+    for i in range(n_nodes):
+        system.add_node(f"n{i}", NodeCapacity(chips=1, hbm_bytes=hbm,
+                                              flops_per_s=1.0))
+    system.register_builder("generic", WorkloadClass.HEAVY,
+                            builder or _toy_builder())
+    return system
+
+
+def _spec(name="svc", replicas=1, tenant="default", priority=0,
+          qos=QoSClass.BURSTABLE, slo_ms=0.0, donates=False):
+    return ServiceSpec(name=name,
+                       workload=Workload(name, WorkloadKind.GENERIC),
+                       executor_class=ExecutorClass.CONTAINER,
+                       replicas=replicas, footprint_hint=10,
+                       latency_slo_ms=slo_ms, tenant=tenant,
+                       priority=priority, qos=qos, donates_inputs=donates)
+
+
+def _w(name, flops=1e10):
+    return Workload(name, WorkloadKind.GENERIC, est_flops=flops)
+
+
+@pytest.fixture(autouse=True)
+def _clear_dispatch_log():
+    ToyExecutor.dispatch_log = []
+    yield
+
+
+# ------------------------------------------------------- spec serialization
+def test_spec_json_roundtrip_including_enum_fields():
+    spec = ServiceSpec(
+        name="gold", workload=Workload("gold", WorkloadKind.DECODE,
+                                       batch=2, seq_len=16,
+                                       latency_slo_ms=25.0, est_flops=1e9),
+        executor_class=ExecutorClass.UNIKERNEL, replicas=3,
+        placement="bin-pack", latency_slo_ms=25.0, footprint_hint=123,
+        tenant="ops", priority=7, qos=QoSClass.GUARANTEED,
+        donates_inputs=True)
+    back = ServiceSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.qos, QoSClass)
+    assert isinstance(back.executor_class, ExecutorClass)
+    assert back.workload.kind is WorkloadKind.DECODE
+    # dicts round-trip too (restore() path parses the saved JSON dicts)
+    assert ServiceSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_spec_roundtrip_with_model_arch(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    spec = ServiceSpec(name="llm",
+                       workload=Workload("serve", WorkloadKind.DECODE, cfg,
+                                         batch=4, seq_len=16))
+    back = ServiceSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.workload.arch.num_params() == cfg.num_params()
+
+
+def test_spec_coerces_string_enums_and_validates_tenant():
+    spec = ServiceSpec(name="s", workload=Workload("s", WorkloadKind.STREAM),
+                       qos="best-effort", executor_class="unikernel")
+    assert spec.qos is QoSClass.BEST_EFFORT
+    assert spec.executor_class is ExecutorClass.UNIKERNEL
+    with pytest.raises(ValueError):
+        ServiceSpec(name="s", workload=Workload("s", WorkloadKind.STREAM),
+                    tenant="")
+
+
+# ------------------------------------------------------------ tenant quotas
+def test_tenant_hbm_quota_refuses_apply():
+    system = _system(n_nodes=3)
+    system.set_tenant_quota("batch", hbm_bytes=25)     # fits 2 x 10, not 3
+    with pytest.raises(PlacementError, match="tenant-quota"):
+        system.apply(_spec("svc", replicas=3, tenant="batch"))
+    assert len(system.instances("svc")) == 2           # partial: quota edge
+    usage = system.admission.tenant_usage()["batch"]
+    assert usage["hbm_bytes"] == 20.0 and usage["hbm_quota"] == 25.0
+
+
+def test_quota_released_on_undeploy():
+    system = _system()
+    system.set_tenant_quota("batch", hbm_bytes=10)
+    system.apply(_spec("a", replicas=1, tenant="batch"))
+    with pytest.raises(PlacementError, match="tenant-quota"):
+        system.apply(_spec("b", replicas=1, tenant="batch"))
+    system.scale("a", 0)                               # frees the quota
+    system.apply(_spec("b", replicas=1, tenant="batch"))
+    assert len(system.instances("b")) == 1
+
+
+def test_flops_quota_refuses_best_effort_not_guaranteed():
+    ctrl = AdmissionController()
+    ctrl.set_quota("noisy", TenantQuota(flops_inflight=1e9))
+    be = _spec("be", tenant="noisy", qos=QoSClass.BEST_EFFORT)
+    gold = _spec("gold", tenant="noisy", qos=QoSClass.GUARANTEED)
+    assert ctrl.admit_dispatch(be, 0.9e9).admitted
+    refused = ctrl.admit_dispatch(be, 0.9e9)           # over in-flight quota
+    assert not refused.admitted and "flops_inflight" in refused.reason
+    # GUARANTEED is never refused on the FLOP quota (still accounted)
+    assert ctrl.admit_dispatch(gold, 0.9e9).admitted
+    ctrl.release_dispatch(be, 0.9e9)
+    ctrl.release_dispatch(gold, 0.9e9)
+    assert ctrl.admit_dispatch(be, 0.9e9).admitted     # released → admitted
+
+
+def test_manager_dispatch_enforces_flops_quota():
+    gate = threading.Event()
+    system = _system(builder=_toy_builder(gates=[gate]))
+    system.set_tenant_quota("noisy", flops_inflight=1.5e10)
+    system.apply(_spec("be", tenant="noisy", qos=QoSClass.BEST_EFFORT))
+
+    results = {}
+    t = threading.Thread(
+        target=lambda: results.update(a=system.submit(_w("be-0"), ())))
+    t.start()
+    deadline = time.monotonic() + 5.0
+    while not system.admission.tenant_usage()["noisy"]["flops_inflight"]:
+        assert time.monotonic() < deadline
+        time.sleep(0.001)
+    with pytest.raises(AdmissionError, match="flops_inflight"):
+        system.submit(_w("be-1"), ())      # 2e10 in flight > 1.5e10 quota
+    gate.set()
+    t.join(timeout=5.0)
+    assert results["a"].executor_name.startswith("toy")
+    assert system.admission.tenant_usage()["noisy"]["flops_inflight"] == 0.0
+    system.submit(_w("be-2"), ())          # quota free again
+
+
+# -------------------------------------------------------------- preemption
+def test_guaranteed_apply_preempts_saturating_best_effort():
+    # ONE node, exactly 3 slots; a BEST_EFFORT tenant saturates it
+    system = _system(n_nodes=1, hbm=30)
+    system.apply(_spec("noise", replicas=3, tenant="noisy",
+                       qos=QoSClass.BEST_EFFORT))
+    assert len(system.instances("noise")) == 3
+    # the GUARANTEED apply cannot be refused: preemption fires
+    deps = system.apply(_spec("gold", replicas=2, tenant="ops",
+                              qos=QoSClass.GUARANTEED))
+    assert len(deps) == 2
+    assert len(system.instances("noise")) == 1
+    preempts = [e for e in system.orchestrator.events
+                if e.startswith("preempt ")]
+    assert len(preempts) == 2
+    # newest BEST_EFFORT instances are evicted first
+    assert "noise/2" in preempts[0] and "noise/1" in preempts[1]
+
+
+def test_preemption_is_priority_ordered_and_class_bounded():
+    system = _system(n_nodes=1, hbm=20)
+    system.apply(_spec("hi", replicas=1, tenant="t", priority=5,
+                       qos=QoSClass.BEST_EFFORT))
+    system.apply(_spec("lo", replicas=1, tenant="t", priority=1,
+                       qos=QoSClass.BEST_EFFORT))
+    system.apply(_spec("gold", replicas=1, qos=QoSClass.GUARANTEED))
+    # the LOWEST-priority best-effort instance was the victim
+    assert len(system.instances("lo")) == 0
+    assert len(system.instances("hi")) == 1
+    # same-class pressure cannot preempt: BURSTABLE vs BURSTABLE refuses
+    system2 = _system(n_nodes=1, hbm=10)
+    system2.apply(_spec("a", replicas=1))
+    with pytest.raises(PlacementError):
+        system2.apply(_spec("b", replicas=1))
+    assert not [e for e in system2.orchestrator.events
+                if e.startswith("preempt")]
+
+
+def test_best_effort_cannot_preempt_anyone():
+    system = _system(n_nodes=1, hbm=10)
+    system.apply(_spec("base", replicas=1, qos=QoSClass.BURSTABLE))
+    with pytest.raises(PlacementError):
+        system.apply(_spec("pushy", replicas=1, qos=QoSClass.BEST_EFFORT))
+
+
+# ------------------------------------------------------- persistence/restart
+def test_save_restore_rereconciles_every_service(tmp_path):
+    path = str(tmp_path / "cluster.json")
+    system = _system(n_nodes=3)
+    system.set_tenant_quota("batch", hbm_bytes=500, flops_inflight=1e12)
+    system.apply(_spec("gold", replicas=2, tenant="ops", priority=3,
+                       qos=QoSClass.GUARANTEED, slo_ms=50.0))
+    system.apply(_spec("noise", replicas=3, tenant="batch",
+                       qos=QoSClass.BEST_EFFORT))
+    system.save_state(path)
+
+    # "kill" the manager node: a BRAND NEW system, same nodes + builders
+    reborn = _system(n_nodes=3)
+    applied = reborn.restore(path)
+    assert applied == ["gold", "noise"]        # GUARANTEED re-applied first
+    for name, n in (("gold", 2), ("noise", 3)):
+        deps = reborn.instances(name)
+        assert len(deps) == n                  # re-reconciled to replicas
+    gold = reborn.manager.specs["gold"]
+    assert gold.qos is QoSClass.GUARANTEED and gold.tenant == "ops"
+    assert gold.priority == 3 and gold.latency_slo_ms == 50.0
+    quota = reborn.admission.quotas["batch"]
+    assert quota.hbm_bytes == 500 and quota.flops_inflight == 1e12
+    # restored services serve traffic immediately
+    res = reborn.submit(_w("gold-req"), ())
+    assert res.service == "gold"
+
+
+def test_restore_degrades_weakest_class_on_shrunken_cluster(tmp_path):
+    path = str(tmp_path / "cluster.json")
+    system = _system(n_nodes=2, hbm=20)
+    system.apply(_spec("noise", replicas=2, qos=QoSClass.BEST_EFFORT))
+    system.apply(_spec("gold", replicas=2, qos=QoSClass.GUARANTEED))
+    system.save_state(path)
+    # restart onto HALF the cluster: guaranteed wins the capacity
+    small = _system(n_nodes=1, hbm=20)
+    with pytest.raises(PlacementError):
+        small.restore(path)                    # noise no longer fits
+    assert len(small.instances("gold")) == 2
+    assert len(small.instances("noise")) == 0
+
+
+# ------------------------------------------------- QoS-ordered submit_many
+def test_noisy_best_effort_cannot_starve_guaranteed_in_submit_many():
+    system = _system()
+    system.apply(_spec("gold", replicas=1, tenant="ops",
+                       qos=QoSClass.GUARANTEED))
+    system.apply(_spec("noise", replicas=1, tenant="noisy",
+                       qos=QoSClass.BEST_EFFORT))
+    # a flood of best-effort items arrives AHEAD of the guaranteed ones
+    items = [(_w(f"noise-{i}"), ()) for i in range(6)]
+    items[3:3] = [(_w(f"gold-{i}"), ()) for i in range(2)]
+    results = system.submit_many(items, speculative=False, concurrent=False)
+    # results stay in caller order...
+    assert [r.output[1] for r in results] == [w.name for w, _ in items]
+    # ...but dispatch STARTED in QoS order: every gold before any noise
+    order = [w for _, w in ToyExecutor.dispatch_log]
+    assert order[0] == "gold-0" and order[1] == "gold-1"
+    assert all(w.startswith("noise") for w in order[2:])
+    # per-tenant attribution reached the telemetry layer
+    lat = system.report()["tenants"]["latency"]
+    assert lat["ops"]["count"] == 2 and lat["noisy"]["count"] == 6
+
+
+def test_submit_many_quota_refusals_surface_per_item():
+    system = _system()
+    system.apply(_spec("gold", replicas=1, tenant="ops",
+                       qos=QoSClass.GUARANTEED))
+    system.apply(_spec("noise", replicas=1, tenant="noisy",
+                       qos=QoSClass.BEST_EFFORT))
+    system.set_tenant_quota("noisy", flops_inflight=1.0)   # refuse ALL noise
+    items = [(_w("noise-0"), ()), (_w("gold-0"), ()), (_w("noise-1"), ())]
+    # a refused best-effort item must not cost the GUARANTEED tenant its
+    # result: exceptions come back in place of the refused items
+    results = system.submit_many(items, speculative=False, concurrent=False,
+                                 return_exceptions=True)
+    assert isinstance(results[0], AdmissionError)
+    assert isinstance(results[2], AdmissionError)
+    assert results[1].output[1] == "gold-0"
+    # default mode: every item still dispatches before the error raises
+    with pytest.raises(AdmissionError):
+        system.submit_many(items, speculative=False, concurrent=False)
+    assert ("toy[gold]0", "gold-0") in ToyExecutor.dispatch_log
+
+
+# --------------------------------------------------- SLO-slack engine order
+def test_engine_admits_by_slo_slack_not_fifo(exact_config):
+    from repro.serving.engine import Request, ServingEngine, slo_slack
+
+    # pure ordering: tightest remaining budget first, no-SLO keeps FIFO
+    now = 100.0
+    reqs = [Request(rid=i, prompt=np.zeros((1,), np.int32),
+                    latency_slo_ms=slo, submitted_at=now - age)
+            for i, (slo, age) in enumerate(
+                [(0.0, 3.0), (1000.0, 0.1), (50.0, 0.0), (0.0, 9.0)])]
+    ordered = sorted(reqs, key=lambda r: slo_slack(r, now))
+    # SLO-bearing first by remaining budget; no-SLO requests keep FIFO
+    assert [r.rid for r in ordered] == [2, 1, 0, 3]
+
+    # integration: ONE slot forces serial admission; the tight-SLO request
+    # submitted LAST must be admitted first
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=1, max_seq=32)
+    rng = np.random.default_rng(0)
+    h_fifo = eng.submit(rng.integers(0, cfg.vocab_size, size=4),
+                        max_new_tokens=2)
+    h_loose = eng.submit(rng.integers(0, cfg.vocab_size, size=4),
+                         max_new_tokens=2, latency_slo_ms=60_000.0)
+    h_tight = eng.submit(rng.integers(0, cfg.vocab_size, size=4),
+                         max_new_tokens=2, latency_slo_ms=10.0)
+    eng.run_until_drained()
+    tight, loose, fifo = (h.result(timeout=60.0)
+                          for h in (h_tight, h_loose, h_fifo))
+    assert tight.admitted_at <= loose.admitted_at <= fifo.admitted_at
+
+
+# ----------------------------------------------------------- SLO autoscale
+def test_autoscale_slo_scales_up_on_p95_and_down_when_idle():
+    system = _system(n_nodes=4, builder=_toy_builder(delays=(0.01,)))
+    system.apply(_spec("svc", replicas=1, slo_ms=1.0))   # 1ms SLO
+    for i in range(5):
+        system.submit(_w(f"svc-{i}"), ())                # ~10ms walls
+    n = system.autoscale("svc", mode="slo", max_n=6)
+    assert n > 1                                         # p95 >> SLO
+    assert system.report()["services"]["svc"] == n
+
+    # a relaxed-SLO service with fast dispatches sheds replicas
+    system.apply(_spec("idle", replicas=2, slo_ms=60_000.0))
+    for i in range(5):
+        system.submit(_w(f"idle-{i}"), ())
+    assert system.autoscale("idle", mode="slo") == 1
+
+    # no SLO declared → slo mode is a no-op
+    system.apply(_spec("noslo", replicas=2))
+    assert system.autoscale("noslo", mode="slo") == 2
+    with pytest.raises(ValueError):
+        system.autoscale("svc", mode="bogus")
+
+
+# --------------------------------------- donation-safe speculative backups
+def test_clone_args_deep_copies_arrays_in_nested_containers():
+    a = np.arange(4)
+    args = (a, {"nested": [np.ones(2)]}, "tag", 7)
+    cloned = clone_args(args)
+    cloned[0][:] = -1
+    cloned[1]["nested"][0][:] = -1
+    assert a.tolist() == [0, 1, 2, 3]
+    assert args[1]["nested"][0].tolist() == [1.0, 1.0]
+    assert cloned[2] == "tag" and cloned[3] == 7
+
+
+def test_speculative_backup_runs_on_cloned_args_for_donating_specs():
+    runner = SpeculativeRunner(threshold=2.0, min_history=2)
+    for _ in range(3):
+        runner.run(lambda: time.sleep(0.01) or "warm")
+    # primary scribbles its args (simulating donation) then straggles;
+    # the backup must see a PRISTINE clone, not the scribbled buffer
+    system = _system(builder=_toy_builder(delays=(1.0, 0.01),
+                                          mutate_first=True),
+                     runner=runner)
+    system.apply(_spec("svc", replicas=2, donates=True))
+    payload = np.arange(8)
+    (res,) = system.submit_many([(_w("svc-0"), (payload,))],
+                                speculative=True, concurrent=False)
+    assert res.winner == "backup"
+    (seen,) = res.output[2]
+    assert seen.tolist() == list(range(8))     # clone predates the scribble
+
+
+# ------------------------------------------------- monitor race (satellite)
+def test_hbm_utilization_survives_unregistered_node():
+    system = _system(n_nodes=2)
+    monitor = system.orchestrator.monitor
+    system.apply(_spec("svc", replicas=1))
+    node = system.instances("svc")[0].node_id
+    assert 0.0 < monitor.hbm_utilization(node) < 1.0
+    monitor.unregister_node(node)
+    assert monitor.hbm_utilization(node) == 1.0     # no KeyError mid-failover
+    assert monitor.fits(node, 1) is False
