@@ -2,10 +2,14 @@
 
 6a: CV apps on the container class (Car < Face < Body < Object order);
 6b: stream task on unikernel-class executors;
-6c: the same stream task on container-class executors.
+6c: the same stream task on container-class executors;
+6d: the serving engine's prefill-vs-decode tick-time split under a mixed
+    load, plus KV pages-in-use vs the dense-equivalent HBM — the paged
+    data plane's two wins (flat decode ticks, fractional KV footprint)
+    in the same CSV stream as the paper panels.
 
 The paper's trade-off (C2): containers process faster, unikernels use fewer
-resources.  We report wall microseconds per dispatch for all three panels.
+resources.  We report wall microseconds per dispatch for all panels.
 """
 from __future__ import annotations
 
@@ -46,6 +50,46 @@ def run() -> list[str]:
                         iters=30)
     rows.append(csv_line("fig6c/container_stream", us_c,
                          f"container;ratio_vs_unikernel={us_c / us_u:.2f}"))
+
+    # 6d — serving engine: prefill/decode tick split + pages-in-use
+    rows.extend(_serving_panel())
+    return rows
+
+
+def _serving_panel() -> list[str]:
+    import numpy as np
+
+    from repro.configs import get_reduced_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_reduced_config("tinyllama-1.1b")
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, max_slots=4, max_seq=128,
+                        prefill_chunk=16, prefill_budget=16)
+    eng.warmup()
+    # a couple of short decoders + one long prompt streaming in chunks
+    for n in (5, 9):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n),
+                   max_new_tokens=12)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=100), max_new_tokens=4)
+    peak_pages, peak_bytes = 0, 0
+    while eng.queue or eng.active:
+        eng.step()
+        if eng.paged:
+            peak_pages = max(peak_pages, eng.kv.pages_in_use())
+            peak_bytes = max(peak_bytes, eng.kv.bytes_in_use())
+    s = eng.stats()
+    rows = [csv_line(
+        "fig6d/engine_decode_tick", s.get("p50_decode_tick_s", 0.0) * 1e6,
+        f"p95_us={s.get('p95_decode_tick_s', 0.0) * 1e6:.1f};"
+        f"prefill_p50_us={s.get('p50_prefill_tick_s', 0.0) * 1e6:.1f};"
+        f"prefill_p95_us={s.get('p95_prefill_tick_s', 0.0) * 1e6:.1f};"
+        f"max_prefill_tok_tick={s.get('max_prefill_tokens_tick', 0)}")]
+    if eng.paged:
+        rows.append(csv_line(
+            "fig6d/engine_kv_hbm", float(peak_bytes),
+            f"peak_pages={peak_pages};"
+            f"dense_equiv_bytes={s['kv_dense_equivalent_bytes']}"))
     return rows
 
 

@@ -33,6 +33,20 @@ disallowed (it thrashes); a GUARANTEED apply therefore cannot be refused
 by a saturating BEST_EFFORT tenant, but two GUARANTEED services compete
 only on free capacity.
 
+**Page-based HBM accounting.**  Instance footprints are what the
+executor reports: the paged serving engine's static reservation is
+params + its KV *page pool* (which can be provisioned below the dense
+``max_slots × max_seq`` layout), and its live commitment
+(``dynamic_footprint_bytes``) is params + pages-in-use — telemetry
+samples carry the live number, so dashboards see paging occupancy, not
+the worst case.
+
+**Capacity observers.**  ``add_release_observer`` callbacks fire after
+every reservation release; the orchestrator uses them to drain its
+pending-redeploy queue of preempted instances.  Releases that happen
+*inside* a preemption are deferred until the admission completes, so a
+victim can't be redeployed into the hole its preemptor is about to fill.
+
 Every admission answer is a typed ``AdmissionDecision(admitted, reason,
 evicted)`` so callers (and tests) see *why* something was refused, not
 just a boolean.
@@ -91,6 +105,25 @@ class AdmissionController:
         # unbounded list would leak in long-running serving
         self.decisions: Deque[AdmissionDecision] = \
             collections.deque(maxlen=256)
+        # capacity observers: notified (outside the lock) whenever an
+        # instance reservation is released — the orchestrator uses this to
+        # drain its pending-redeploy queue of preempted instances
+        self._release_observers: List[Callable[[str], None]] = []
+        self._in_admission = 0            # depth guard: defer notifications
+        self._deferred_release: List[str] = []
+
+    def add_release_observer(self, fn: Callable[[str], None]):
+        """Register a callback fired with the node id after every
+        per-instance reservation release (undeploy/evict).  ``forget_node``
+        does NOT notify — a dead node frees no usable capacity.  Called
+        outside the admission lock, so observers may re-enter the
+        controller — but a release that happens *during* an admission
+        (preemption) only notifies once that admission completes."""
+        self._release_observers.append(fn)
+
+    def _notify_release(self, node_id: str):
+        for fn in list(self._release_observers):
+            fn(node_id)
 
     # ------------------------------------------------------------- quotas
     def set_quota(self, tenant: str, quota: Optional[TenantQuota]):
@@ -140,52 +173,73 @@ class AdmissionController:
 
         ``victims`` lists the instances currently on the node; ``evict``
         undeploys one by name (the orchestrator's callback, which releases
-        the victim's reservation back through this controller).
+        the victim's reservation back through this controller).  Victim
+        releases during the preemption defer their capacity-freed
+        notification until this admission completes.
         """
         with self._lock:
-            if not self._hbm_headroom_ok(spec.tenant, hbm_bytes):
-                return self._decide(AdmissionDecision(
-                    False, reason=f"tenant-quota: {spec.tenant!r} over "
-                    f"hbm_bytes quota", node_id=node_id))
-            if self.monitor.commit(node_id, key, hbm_bytes):
-                self._account(node_id, key, spec.tenant, hbm_bytes)
-                return self._decide(AdmissionDecision(True, node_id=node_id))
-            # node capacity refused — try priority-ordered preemption:
-            # worst class first, lowest priority first, newest first
-            def eviction_order(v: Victim):
-                name, _b, vspec = v
-                tail = name.rsplit("/", 1)[-1]
-                idx = int(tail) if tail.isdigit() else 0
-                return (-QOS_RANK[vspec.qos], vspec.priority, -idx)
+            self._in_admission += 1
+            try:
+                decision = self._admit_instance_locked(
+                    node_id, key, hbm_bytes, spec, victims, evict)
+            finally:
+                self._in_admission -= 1
+                pending, self._deferred_release = self._deferred_release, []
+        for freed_node in pending:
+            self._notify_release(freed_node)
+        return decision
 
-            evictable = sorted(
-                (v for v in victims if can_preempt(spec, v[2])),
-                key=eviction_order)
-            if not evictable or evict is None:
-                return self._decide(AdmissionDecision(
-                    False, reason=f"capacity: {hbm_bytes} bytes do not fit "
-                    f"on {node_id}", node_id=node_id))
-            evicted = []
-            for name, _vbytes, _vspec in evictable:
-                evict(name)
-                evicted.append(name)
-                if self.monitor.fits(node_id, hbm_bytes):
-                    break
-            if not self.monitor.commit(node_id, key, hbm_bytes):
-                return self._decide(AdmissionDecision(
-                    False, reason=f"capacity: {hbm_bytes} bytes do not fit "
-                    f"on {node_id} even after preempting {evicted}",
-                    evicted=evicted, node_id=node_id))
+    def _admit_instance_locked(self, node_id, key, hbm_bytes, spec,
+                               victims, evict) -> AdmissionDecision:
+        if not self._hbm_headroom_ok(spec.tenant, hbm_bytes):
+            return self._decide(AdmissionDecision(
+                False, reason=f"tenant-quota: {spec.tenant!r} over "
+                f"hbm_bytes quota", node_id=node_id))
+        if self.monitor.commit(node_id, key, hbm_bytes):
             self._account(node_id, key, spec.tenant, hbm_bytes)
-            return self._decide(AdmissionDecision(True, evicted=evicted,
-                                                  node_id=node_id))
+            return self._decide(AdmissionDecision(True, node_id=node_id))
+        # node capacity refused — try priority-ordered preemption:
+        # worst class first, lowest priority first, newest first
+        def eviction_order(v: Victim):
+            name, _b, vspec = v
+            tail = name.rsplit("/", 1)[-1]
+            idx = int(tail) if tail.isdigit() else 0
+            return (-QOS_RANK[vspec.qos], vspec.priority, -idx)
+
+        evictable = sorted(
+            (v for v in victims if can_preempt(spec, v[2])),
+            key=eviction_order)
+        if not evictable or evict is None:
+            return self._decide(AdmissionDecision(
+                False, reason=f"capacity: {hbm_bytes} bytes do not fit "
+                f"on {node_id}", node_id=node_id))
+        evicted = []
+        for name, _vbytes, _vspec in evictable:
+            evict(name)
+            evicted.append(name)
+            if self.monitor.fits(node_id, hbm_bytes):
+                break
+        if not self.monitor.commit(node_id, key, hbm_bytes):
+            return self._decide(AdmissionDecision(
+                False, reason=f"capacity: {hbm_bytes} bytes do not fit "
+                f"on {node_id} even after preempting {evicted}",
+                evicted=evicted, node_id=node_id))
+        self._account(node_id, key, spec.tenant, hbm_bytes)
+        return self._decide(AdmissionDecision(True, evicted=evicted,
+                                              node_id=node_id))
 
     def _account(self, node_id: str, key: str, tenant: str, hbm_bytes: int):
         self._keys[(node_id, key)] = (tenant, hbm_bytes)
         self._tenant_hbm[tenant] = self._tenant_hbm.get(tenant, 0) + hbm_bytes
 
     def release(self, node_id: str, key: str):
-        """Release one instance reservation (monitor + tenant accounting)."""
+        """Release one instance reservation (monitor + tenant accounting).
+
+        Observers registered via ``add_release_observer`` see the freed
+        capacity — unless this release happens inside an ``admit_instance``
+        preemption, where notification is deferred until the preemptor's
+        admission completes (redeploying the victim mid-preemption would
+        undo the eviction)."""
         with self._lock:
             self.monitor.release(node_id, key)
             owned = self._keys.pop((node_id, key), None)
@@ -193,6 +247,11 @@ class AdmissionController:
                 tenant, hbm = owned
                 self._tenant_hbm[tenant] = \
                     max(0, self._tenant_hbm.get(tenant, 0) - hbm)
+            deferred = self._in_admission > 0
+            if deferred:
+                self._deferred_release.append(node_id)
+        if not deferred:
+            self._notify_release(node_id)
 
     def forget_node(self, node_id: str):
         """Drop tenant attribution for a node whose monitor state is gone

@@ -116,7 +116,14 @@ class BaseExecutor:
         return False
 
     def footprint_bytes(self) -> int:
+        """Static HBM reservation — what placement admits against."""
         raise NotImplementedError
+
+    def dynamic_footprint_bytes(self) -> int:
+        """Live HBM commitment.  Executors with elastic state (the paged
+        serving engine counts KV *pages in use*, not worst-case rows)
+        override this; everything else is static."""
+        return self.footprint_bytes()
 
     def can_run(self, workload: Workload, args: Tuple) -> bool:
         raise NotImplementedError

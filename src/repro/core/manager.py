@@ -238,7 +238,10 @@ class ConfigurationManager:
             workload=workload.name, workload_class=wclass.value,
             executor_class=dep.executor.executor_class.value,
             executor=dep.executor.name, node=dep.node_id, wall_s=wall,
-            cold=fresh, footprint_bytes=dep.executor.footprint_bytes(),
+            cold=fresh,
+            # live commitment, not the static reservation — paged serving
+            # engines report KV pages-in-use here
+            footprint_bytes=dep.executor.dynamic_footprint_bytes(),
             winner=winner, backup_launched=backup_launched,
             service=dep.service, tenant=dep.spec.tenant))
 

@@ -16,6 +16,7 @@ submeshes or logical nodes).  The orchestrator owns
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
@@ -144,6 +145,17 @@ class Orchestrator:
         self.deployments: Dict[str, Deployment] = {}
         self.events: List[str] = []
         self.detector = detector
+        # preempted instances queue here for redeploy; the admission
+        # controller's release observer marks freed capacity and the next
+        # drain (triggered from undeploy/scale/rejoin) reconciles them
+        self.pending_redeploy: collections.deque = collections.deque()
+        self.eviction_hooks: List[Callable[[str, str, str], None]] = []
+        # evictions recorded during an admission; hooks fire only after
+        # the admission completes (outside the admission lock)
+        self._pending_evictions: List[tuple] = []
+        self._capacity_freed = False
+        self._redeploying = False
+        self.admission.add_release_observer(self._on_capacity_freed)
         if detector is not None:
             detector.on_change(self._on_health_change)
 
@@ -216,11 +228,78 @@ class Orchestrator:
                 best, best_room = node.node_id, room
         return best
 
+    def _on_capacity_freed(self, node_id: str):
+        self._capacity_freed = True
+
     def _evict(self, name: str, preemptor: str):
         dep = self.deployments.pop(name, None)
         if dep is not None:
             self.admission.release(dep.node_id, name)
             self.events.append(f"preempt {name} (for {preemptor})")
+            if dep.service in self.services:
+                self.pending_redeploy.append(dep.service)
+                self.events.append(f"requeue {dep.service}")
+            # ``_evict`` runs inside ``admit_instance`` (admission lock
+            # held, preemptor not yet committed) — firing user hooks here
+            # would invert lock order vs callers holding their own locks
+            # and let a hook-driven drain redeploy the victim into the
+            # hole the preemptor is about to fill, so they are queued and
+            # flushed after the admission returns
+            self._pending_evictions.append((name, dep.service, dep.node_id))
+
+    def _flush_eviction_hooks(self):
+        events, self._pending_evictions = self._pending_evictions, []
+        for args in events:
+            for hook in list(self.eviction_hooks):
+                hook(*args)
+
+    def on_eviction(self, hook: Callable[[str, str, str], None]):
+        """Register a callback fired as ``hook(instance, service, node)``
+        whenever an instance is preempted for a stronger QoS class.  Hooks
+        fire after the preempting admission has settled (committed or
+        refused), never mid-preemption."""
+        self.eviction_hooks.append(hook)
+
+    def drain_pending_redeploys(self) -> List[str]:
+        """Redeploy services whose instances were preempted, once the
+        admission controller has observed freed capacity.  Best-effort and
+        single-pass: services that still don't fit stay queued for the
+        next capacity-freed event.  Called automatically after undeploy /
+        scale-down / rejoin; safe to call any time."""
+        if self._redeploying or not self._capacity_freed:
+            return []
+        # consume the flag even when nothing is queued — a stale True
+        # left by an unrelated undeploy would otherwise let a later
+        # drain run against capacity that was never actually freed
+        self._capacity_freed = False
+        if not self.pending_redeploy:
+            return []
+        self._redeploying = True
+        healed: List[str] = []
+        try:
+            # dedupe, keeping order: one reconcile covers every queued
+            # eviction of the same service
+            work = list(dict.fromkeys(self.pending_redeploy))
+            leftovers: List[str] = []
+            self.pending_redeploy.clear()
+            for service in work:
+                rec = self.services.get(service)
+                if rec is None:
+                    continue
+                missing = rec.spec.replicas - len(self.instances(service))
+                for _ in range(missing):
+                    try:
+                        dep = self._deploy_instance(rec)
+                    except PlacementError:
+                        leftovers.append(service)
+                        break
+                    healed.append(dep.name)
+                    self.events.append(
+                        f"redeploy {dep.name} -> {dep.node_id}")
+            self.pending_redeploy.extend(leftovers)
+        finally:
+            self._redeploying = False
+        return healed
 
     def _deploy_instance(self, rec: ServiceRecord,
                          name: Optional[str] = None) -> Deployment:
@@ -247,7 +326,14 @@ class Orchestrator:
             node_id, name, rec.footprint, spec,
             victims=self._victims_on(node_id, spec.name),
             evict=lambda victim: self._evict(victim, name))
+        self._flush_eviction_hooks()
         if not decision.admitted:
+            if decision.evicted:
+                # the preemptor evicted victims and then failed to fit:
+                # their capacity is genuinely free, and no later
+                # undeploy/scale event may ever come — reclaim it for
+                # the victims now instead of stranding them queued
+                self.drain_pending_redeploys()
             raise PlacementError(
                 f"admission refused {name!r} on {node_id}: "
                 f"{decision.reason}")
@@ -267,11 +353,14 @@ class Orchestrator:
         if dep is not None:
             self.admission.release(dep.node_id, name)
             self.events.append(f"undeploy {name}")
+            self.drain_pending_redeploys()
 
     def remove_service(self, service: str):
+        # drop the record first: the undeploys below trigger pending-
+        # redeploy drains, which must not resurrect the removed service
+        self.services.pop(service, None)
         for dep in self.instances(service):
             self.undeploy(dep.name)
-        self.services.pop(service, None)
 
     def instances(self, service: str) -> List[Deployment]:
         def index_key(d: Deployment):
@@ -322,6 +411,7 @@ class Orchestrator:
         node.healthy = True
         self.monitor.register_node(node_id, node.capacity)
         self.events.append(f"rejoin {node_id}")
+        self.pending_redeploy.clear()   # reconcile() covers every service
         return self.reconcile()
 
     def reconcile(self) -> List[str]:
@@ -350,13 +440,16 @@ class Orchestrator:
             raise PlacementError(f"unknown service {service!r}")
         current = self.instances(service)
         n = len(current)
+        # store the new target BEFORE undeploying: each undeploy drains
+        # the pending-redeploy queue, and a stale replica count would
+        # resurrect the very instances being scaled away
+        rec.spec = rec.spec.with_replicas(target)
         if target > n:
             for _ in range(target - n):
                 self._deploy_instance(rec)
         elif target < n:
             for dep in current[target:]:
                 self.undeploy(dep.name)
-        rec.spec = rec.spec.with_replicas(target)
         return len(self.instances(service))
 
     def autoscale(self, service: str, queue_depth: int, per_instance: int,

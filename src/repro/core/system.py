@@ -96,6 +96,27 @@ class EdgeSystem:
         return self.manager.autoscale(service, self.queue.depth(),
                                       per_instance, min_n=min_n, max_n=max_n)
 
+    def on_eviction(self, hook) -> "EdgeSystem":
+        """Register ``hook(instance, service, node)`` fired whenever an
+        instance is preempted for a stronger QoS class.  Preempted
+        BEST_EFFORT instances also queue on the orchestrator's
+        pending-redeploy list and are redeployed automatically when the
+        admission controller observes freed capacity (undeploy,
+        scale-down, node rejoin)."""
+        self.orchestrator.on_eviction(hook)
+        return self
+
+    @property
+    def pending_redeploys(self):
+        """Services with preempted instances awaiting freed capacity."""
+        return list(self.orchestrator.pending_redeploy)
+
+    def drain_pending_redeploys(self):
+        """Manually attempt redeploy of preempted instances (normally
+        automatic on capacity-freeing events)."""
+        with self.manager._route_lock:
+            return self.orchestrator.drain_pending_redeploys()
+
     def set_tenant_quota(self, tenant: str,
                          hbm_bytes: Optional[int] = None,
                          flops_inflight: Optional[float] = None

@@ -87,6 +87,24 @@ def decode_attention(
                                interpret=(mode == "interpret"))
 
 
+def paged_decode_attention(
+    q, k_pages, v_pages, page_table, cache_len, *, softcap: float = 0.0,
+    window: int = 0, sm_scale: Optional[float] = None,
+    impl: Optional[str] = None,
+):
+    """One-token query [B,Hq,D] against a paged pool [P,page,Hkv,D] gathered
+    through ``page_table`` [B,MP] (see ``serving.kv_cache.PagedKVCache``)."""
+    mode = _resolve(impl)
+    if mode in ("ref", "blocked"):   # gather + dense decode oracle
+        return ref.paged_decode_attention(
+            q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
+            window=window, sm_scale=sm_scale)
+    from repro.kernels import paged_decode_attention as pda
+    return pda.paged_decode_attention(
+        q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
+        window=window, sm_scale=sm_scale, interpret=(mode == "interpret"))
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD scan
 # ---------------------------------------------------------------------------

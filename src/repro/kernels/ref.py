@@ -102,6 +102,34 @@ def decode_attention(
     return out.reshape(B, Hq, vf.shape[-1]).astype(q.dtype)
 
 
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize paged KV as a dense cache: ``[P, page, ...]`` pool +
+    ``[B, MP]`` table → ``[B, MP*page, ...]``.  Logical pages beyond the
+    valid length may map anywhere (the allocator's trash page) — callers
+    mask by ``cache_len``, so gathered garbage never contributes."""
+    g = pages[page_table]                          # [B, MP, page, ...]
+    B, MP, page = g.shape[:3]
+    return g.reshape(B, MP * page, *g.shape[3:])
+
+
+def paged_decode_attention(
+    q: jax.Array,                  # [B, Hq, D]
+    k_pages: jax.Array,            # [P, page, Hkv, D] physical page pool
+    v_pages: jax.Array,            # [P, page, Hkv, Dv]
+    page_table: jax.Array,         # [B, MP] int32
+    cache_len: jax.Array,          # [B] valid tokens (incl. new token)
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle: gather the pages into a dense cache, then dense decode."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention(q, k, v, cache_len, softcap=softcap,
+                            window=window, sm_scale=sm_scale)
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD chunked scan
 # ---------------------------------------------------------------------------

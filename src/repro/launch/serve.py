@@ -62,6 +62,16 @@ def main() -> None:
     (dep,) = system.apply(spec)
     engine = dep.executor.engine
 
+    # pre-compile the decode step + every prefill chunk bucket BEFORE
+    # traffic: the first burst then streams through warm programs instead
+    # of paying serial JIT walls mid-traffic
+    engine.warmup()
+    print(f"warmup: decode + {len(engine.chunk_buckets)} chunk buckets "
+          f"in {engine.warmup_s:.2f}s "
+          f"({'paged' if engine.paged else 'dense'} KV, "
+          f"chunk={engine.chunk_tokens}, "
+          f"budget={engine.prefill_budget} tok/tick)")
+
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
     with engine:                       # start the background engine loop
@@ -88,9 +98,17 @@ def main() -> None:
 
     stats = engine.stats()
     for key in ("p50_request_wall_s", "p95_request_wall_s",
-                "p99_request_wall_s", "p50_ttft_s", "p95_ttft_s"):
+                "p99_request_wall_s", "p50_ttft_s", "p95_ttft_s",
+                "p50_prefill_tick_s", "p95_prefill_tick_s",
+                "p50_decode_tick_s", "p95_decode_tick_s"):
         if key in stats:
             print(f"  {key}={stats[key] * 1e3:.1f}ms")
+    if stats.get("paged"):
+        print(f"  kv: dense-equivalent "
+              f"{stats['kv_dense_equivalent_bytes'] / 2**20:.1f}MiB -> "
+              f"pool {stats['kv_capacity_bytes'] / 2**20:.1f}MiB, "
+              f"peak in-tick budget "
+              f"{stats.get('max_prefill_tokens_tick', 0)} prefill tok")
     summary = engine.dispatch_stats.summary()["heavy"]
     if summary:
         print(f"  dispatch_stats: count={summary['count']} "

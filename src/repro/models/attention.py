@@ -101,6 +101,21 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
         jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype)))
 
 
+def init_paged_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                    dtype=jnp.bfloat16):
+    """Per-layer paged KV pool: ``num_pages`` physical pages of
+    ``page_size`` tokens each, shared by every sequence through per-request
+    page tables.  Physical page 0 is the allocator's trash page (masked
+    writes land there), so usable capacity is ``num_pages - 1`` pages.
+    Standard attention only — MLA/SWA/SSM keep the dense slot cache."""
+    assert cfg.attn_type == "full", cfg.attn_type
+    hd = cfg.head_dim_
+    return {
+        "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
+    }
+
+
 # ---------------------------------------------------------------------------
 # projections
 # ---------------------------------------------------------------------------
@@ -222,6 +237,96 @@ def _fill_cache_mla(cache, c_kv, k_rope, positions):
     cache["c_kv"] = cache["c_kv"].astype(c_kv.dtype).at[bidx, slots].set(c_kv)
     cache["k_rope"] = cache["k_rope"].astype(k_rope.dtype).at[bidx, slots].set(k_rope)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# paged / chunked prefill + decode
+# ---------------------------------------------------------------------------
+
+def _page_scatter(pool, k, v, page_table, positions, valid_len):
+    """Write chunk KV [B, T, H, D] into the pool at the logical positions'
+    pages.  Padded tokens (``positions >= valid_len``) AND positions past
+    the table's span (a decode step at a full ``max_seq`` cache) are
+    redirected to physical page 0 — the trash page — so neither bucket
+    padding nor an out-of-range append can corrupt a live page."""
+    ps = pool["k"].shape[1]
+    MP = page_table.shape[1]
+    lpage_raw = positions // ps                           # [B, T]
+    lpage = jnp.minimum(lpage_raw, MP - 1)
+    valid = (positions < valid_len[:, None]) & (lpage_raw < MP)
+    pids = jnp.where(valid, jnp.take_along_axis(page_table, lpage, axis=1), 0)
+    offs = jnp.where(valid, positions % ps, 0)
+    pool = dict(pool)
+    pool["k"] = pool["k"].astype(k.dtype).at[pids, offs].set(k)
+    pool["v"] = pool["v"].astype(v.dtype).at[pids, offs].set(v)
+    return pool
+
+
+def prefill_chunk_paged(params, x, cfg: ModelConfig, pool, page_table,
+                        positions, new_len):
+    """One prefill chunk against a paged pool: scatter the chunk's KV into
+    the request's pages, then attend the chunk queries over the *whole*
+    cached prefix (earlier chunks included) gathered through the page
+    table.  ``new_len`` [B] = tokens valid after this chunk; bucket padding
+    beyond it is masked (and its writes go to the trash page).
+    Returns (out [B, T, d], new_pool)."""
+    from repro.kernels.ref import gather_pages
+
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    q, k, v = _qkv(params, x, cfg, positions)
+    pool = _page_scatter(pool, k, v, page_table, positions, new_len)
+    kd = gather_pages(pool["k"], page_table)              # [B, MP*ps, H, D]
+    vd = gather_pages(pool["v"], page_table)
+    B, S = kd.shape[0], kd.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o = ops.flash_attention(q, kd, vd, causal=True, window=0,
+                            softcap=cfg.attn_logit_softcap,
+                            q_positions=positions, kv_positions=kv_pos,
+                            kv_valid_len=new_len)
+    return _out_proj(params, o, cfg), pool
+
+
+def prefill_chunk_dense(params, x, cfg: ModelConfig, cache, positions,
+                        new_len):
+    """Chunked prefill into a dense cache (stateful families' staging
+    cache): fill the chunk KV at its positions, then attend over the cache
+    prefix + chunk.  Exact-length chunks only (no bucket padding) — the
+    stateful families that use this path already prefill exact shapes."""
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    q, k, v = _qkv(params, x, cfg, positions)
+    cache = _fill_cache(cache, k, v, positions, cfg)
+    B, S = cache["k"].shape[0], cache["k"].shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o = ops.flash_attention(q, cache["k"], cache["v"], causal=True, window=0,
+                            softcap=cfg.attn_logit_softcap,
+                            q_positions=positions, kv_positions=kv_pos,
+                            kv_valid_len=new_len)
+    return _out_proj(params, o, cfg), cache
+
+
+def decode_step_paged(
+    params,
+    x: jax.Array,                     # [B, 1, d]
+    cfg: ModelConfig,
+    pool: dict,
+    page_table: jax.Array,            # [B, MP]
+    cache_len: jax.Array,             # [B] tokens already in cache
+):
+    """Single-token decode against the paged pool: append the new token's
+    KV at position ``cache_len`` through the page table, then run the
+    paged decode-attention kernel.  Rows whose table row is all-zero
+    (unowned slots) write to and read from the trash page — harmless."""
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    positions = cache_len[:, None]
+    q, k, v = _qkv(params, x, cfg, positions)
+    pool = _page_scatter(pool, k, v, page_table, positions, cache_len + 1)
+    o = ops.paged_decode_attention(
+        q[:, 0], pool["k"], pool["v"], page_table, cache_len + 1,
+        softcap=cfg.attn_logit_softcap)
+    return _out_proj(params, o[:, None], cfg), pool
 
 
 # ---------------------------------------------------------------------------

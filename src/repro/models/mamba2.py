@@ -92,14 +92,25 @@ def apply_mamba2(
     state: Optional[dict] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Full-sequence SSD pass.  If ``state`` is given, the final recurrent
-    state is returned (prefill → decode handoff)."""
+    state is returned (prefill → decode handoff), AND the carried conv tail
+    is prepended to the conv input — so a prefill can resume mid-prompt
+    (chunked prefill): the first ``d_conv - 1`` tokens of a chunk see the
+    previous chunk's pre-conv stream instead of zero padding.  A zero
+    conv state reproduces the stateless path exactly."""
     s, di, H, conv_dim = _dims(cfg)
     B, T, _ = x.shape
     dt_c = cfg.cdtype
     zxbcdt = x.astype(dt_c) @ p["in_proj"].astype(dt_c)
-    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
-    xBC = jax.nn.silu(_causal_depthwise_conv(
-        xBC, p["conv_w"].astype(dt_c), p["conv_b"].astype(dt_c)))
+    z, xBC_raw, dt_raw = _split_proj(zxbcdt, cfg)
+    if state is not None:
+        pre = jnp.concatenate([state["conv"].astype(dt_c), xBC_raw], axis=1)
+        conv_out = _causal_depthwise_conv(
+            pre, p["conv_w"].astype(dt_c),
+            p["conv_b"].astype(dt_c))[:, s.d_conv - 1:]
+    else:
+        conv_out = _causal_depthwise_conv(
+            xBC_raw, p["conv_w"].astype(dt_c), p["conv_b"].astype(dt_c))
+    xBC = jax.nn.silu(conv_out)
     x_in, B_, C_ = _split_xbc(xBC, cfg)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,T,H]
@@ -122,10 +133,9 @@ def apply_mamba2(
     out = y @ p["out_proj"].astype(dt_c)
 
     if state is not None:
-        new_conv = jnp.concatenate(
-            [state["conv"].astype(dt_c),
-             _split_proj(zxbcdt, cfg)[1]], axis=1)[:, -(s.d_conv - 1):]
         # conv state holds the *pre-conv* xBC stream tail
+        new_conv = jnp.concatenate(
+            [state["conv"].astype(dt_c), xBC_raw], axis=1)[:, -(s.d_conv - 1):]
         state = {"conv": new_conv, "ssm": final}
     return out, state
 

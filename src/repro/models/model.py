@@ -115,6 +115,54 @@ class Model:
     def init_caches(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
         return transformer.init_cache_tree(self.cfg, batch, max_seq, dtype)
 
+    def init_paged_caches(self, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+        """Paged KV pools (full-attention families): ``num_pages`` physical
+        pages shared across sequences via per-request page tables."""
+        return transformer.init_paged_cache_tree(self.cfg, num_pages,
+                                                 page_size, dtype)
+
+    def prefill_chunk(self, params: Params, batch: Dict[str, jax.Array],
+                      caches: Params, start: jax.Array, new_len: jax.Array,
+                      page_table: Optional[jax.Array] = None):
+        """Prefill ONE chunk of a prompt, resuming from cached state.
+
+        ``batch["tokens"]`` is the [B, C] chunk (possibly right-padded to a
+        bucket on the paged path); ``start`` [B] is the absolute position
+        of its first token and ``new_len`` [B] the valid prompt length
+        after the chunk.  With ``page_table`` the chunk's KV lands in the
+        request's pages and attention gathers the whole cached prefix;
+        without it the chunk resumes a dense staging cache (attention over
+        the cache prefix; SSM layers resume their carried conv/ssm state).
+        Returns (last-valid-token logits [B, V], updated caches)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, T = x.shape[:2]
+        positions = start[:, None] + jnp.arange(T)[None]
+        x, _, caches = transformer.forward_stack(
+            params["stack"], x, cfg, positions=positions, mode="prefill",
+            caches=caches, cache_len=new_len, page_table=page_table,
+            chunked=True)
+        local_last = jnp.maximum(new_len - start - 1, 0).astype(jnp.int32)
+        last = jnp.take_along_axis(x, local_last[:, None, None],
+                                   axis=1)[:, 0]
+        logits = apply_lm_head(params["embed"], params.get("head"),
+                               last[:, None], cfg)
+        return logits[:, 0], caches
+
+    def decode_paged(self, params: Params, tokens: jax.Array, caches: Params,
+                     page_table: jax.Array, cache_len: jax.Array):
+        """One decode step against paged KV pools.  tokens: [B] int32 →
+        (logits [B, V], caches); the new token's KV is appended at
+        ``cache_len`` through the page table."""
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], tokens[:, None], cfg)
+        x, _, caches = transformer.forward_stack(
+            params["stack"], x, cfg, positions=None, mode="decode",
+            caches=caches, cache_len=cache_len, page_table=page_table)
+        logits = apply_lm_head(params["embed"], params.get("head"), x, cfg)
+        return logits[:, 0], caches
+
     def prefill(self, params: Params, batch: Dict[str, jax.Array],
                 caches: Params, positions: Optional[jax.Array] = None,
                 last_index: Optional[jax.Array] = None):

@@ -56,20 +56,36 @@ def init_mamba_block(key, cfg: ModelConfig) -> Params:
     return {"mamba": mamba2.init_mamba2(key, cfg), "norm": init_norm(cfg)}
 
 
-def _attn_call(bp, x, cfg, positions, cache, cache_len, mode):
+def _attn_call(bp, x, cfg, positions, cache, cache_len, mode,
+               page_table=None, chunked=False):
+    if page_table is not None:
+        # paged serving path: `cache` is this layer's page pool; in chunked
+        # prefill `cache_len` carries the post-chunk valid length
+        if mode == "decode":
+            return attention.decode_step_paged(bp["attn"], x, cfg, cache,
+                                               page_table, cache_len)
+        return attention.prefill_chunk_paged(bp["attn"], x, cfg, cache,
+                                             page_table, positions, cache_len)
     if mode == "decode":
         return attention.decode_step(bp["attn"], x, cfg, cache, cache_len)
+    if chunked and mode == "prefill":
+        # chunk-resume prefill into a dense staging cache: attend over the
+        # already-cached prefix, not just the chunk
+        return attention.prefill_chunk_dense(bp["attn"], x, cfg, cache,
+                                             positions, cache_len)
     return attention.attend(bp["attn"], x, cfg, positions=positions,
                             causal=not cfg.encoder_only,
                             cache=cache if mode == "prefill" else None)
 
 
 def attn_block(bp: Params, x, cfg: ModelConfig, *, positions, mode: str,
-               cache=None, cache_len=None, use_moe: bool = False):
+               cache=None, cache_len=None, use_moe: bool = False,
+               page_table=None, chunked: bool = False):
     """Returns (x, aux, new_cache)."""
     x = shard(x, "batch", "act_seq", "embed")
     h = apply_norm(bp["norm1"], x, cfg)
-    attn_out, new_cache = _attn_call(bp, h, cfg, positions, cache, cache_len, mode)
+    attn_out, new_cache = _attn_call(bp, h, cfg, positions, cache, cache_len,
+                                     mode, page_table, chunked)
     aux = jnp.zeros((), jnp.float32)
     if cfg.parallel_block:
         ff = apply_mlp(bp["mlp"], h, cfg)
@@ -158,6 +174,25 @@ def _stack_tree(tree, n: int):
     return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
 
 
+def init_paged_cache_tree(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16) -> Params:
+    """Paged pools stacked along the layer axis (``[L, P, page, H, D]``
+    leaves).  One page table row (owned by the serving engine) addresses
+    the same logical pages in every layer's pool.  Only full-attention
+    families page; stateful families keep the dense slot cache."""
+    fam = cfg.family
+    one = attention.init_paged_pool(cfg, num_pages, page_size, dtype)
+    if fam in ("dense", "encoder"):
+        return {"attn": _stack_tree(one, cfg.num_layers)}
+    if fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        c = {"attn": _stack_tree(one, cfg.num_layers - nd)}
+        if nd:
+            c["attn_dense"] = _stack_tree(one, nd)
+        return c
+    raise ValueError(f"paged KV cache unsupported for family {fam!r}")
+
+
 def init_cache_tree(cfg: ModelConfig, batch: int, max_seq: int,
                     dtype=jnp.bfloat16) -> Params:
     fam = cfg.family
@@ -203,13 +238,14 @@ def _remat(fn, cfg: ModelConfig, mode: str):
 
 
 def _scan_attn_blocks(blocks, x, cfg, *, positions, mode, caches, cache_len,
-                      use_moe: bool):
+                      use_moe: bool, page_table=None, chunked: bool = False):
     def body(carry, xs):
         x, aux = carry
         bp, cache = xs
         x, aux_i, new_cache = attn_block(
             bp, x, cfg, positions=positions, mode=mode, cache=cache,
-            cache_len=cache_len, use_moe=use_moe)
+            cache_len=cache_len, use_moe=use_moe, page_table=page_table,
+            chunked=chunked)
         return (x, aux + aux_i), new_cache
 
     body = _remat(body, cfg, mode)
@@ -268,10 +304,15 @@ def forward_stack(
     mode: str = "train",                    # train | prefill | decode
     caches: Optional[Params] = None,
     cache_len: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,  # [B, MP] → paged attn caches
+    chunked: bool = False,                   # prefill resumes a cached prefix
 ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
     """Returns (hidden, aux_loss, new_caches)."""
     fam = cfg.family
     assert mode in ("train", "prefill", "decode")
+    if page_table is not None:
+        assert fam in ("dense", "encoder", "moe"), \
+            f"paged attention unsupported for family {fam!r}"
     if mode == "train":
         caches = None
     new_caches: Optional[Params] = None
@@ -280,7 +321,8 @@ def forward_stack(
         c = caches["attn"] if caches else None
         x, aux, nc = _scan_attn_blocks(
             params["blocks"], x, cfg, positions=positions, mode=mode,
-            caches=c, cache_len=cache_len, use_moe=False)
+            caches=c, cache_len=cache_len, use_moe=False,
+            page_table=page_table, chunked=chunked)
         new_caches = {"attn": nc} if nc is not None else None
 
     elif fam == "moe":
@@ -290,14 +332,16 @@ def forward_stack(
             cd = caches["attn_dense"] if caches else None
             x, aux_d, ncd = _scan_attn_blocks(
                 params["dense_blocks"], x, cfg, positions=positions, mode=mode,
-                caches=cd, cache_len=cache_len, use_moe=False)
+                caches=cd, cache_len=cache_len, use_moe=False,
+                page_table=page_table, chunked=chunked)
             aux = aux + aux_d
             if ncd is not None:
                 new_caches["attn_dense"] = ncd
         c = caches["attn"] if caches else None
         x, aux_m, nc = _scan_attn_blocks(
             params["blocks"], x, cfg, positions=positions, mode=mode,
-            caches=c, cache_len=cache_len, use_moe=True)
+            caches=c, cache_len=cache_len, use_moe=True,
+            page_table=page_table, chunked=chunked)
         aux = aux + aux_m
         if nc is not None:
             new_caches["attn"] = nc
@@ -320,7 +364,8 @@ def forward_stack(
                 mamba_params, x, cfg, mode=mode, states=mamba_states)
             x, aux_i, new_acache = attn_block(
                 shared, x, cfg, positions=positions, mode=mode,
-                cache=attn_cache, cache_len=cache_len, use_moe=False)
+                cache=attn_cache, cache_len=cache_len, use_moe=False,
+                chunked=chunked)
             return (x, aux + aux_i), (new_mstates, new_acache)
 
         super_body = _remat(super_body, cfg, mode)

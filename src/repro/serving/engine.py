@@ -1,11 +1,26 @@
-"""Continuous-batching serving engine with a background engine loop.
+"""Continuous-batching serving engine: paged KV + chunked-prefill ticks.
 
-One decode program (fixed ``max_slots`` batch) advances every active request
-each tick; prefills are bucketed by prompt length so the container-class
-executor compiles a handful of shapes, not one per request.  Inactive slots
-ride along masked (their cache_len doesn't advance; the slot row they write
-is beyond their valid length, hence harmless) — so the engine never
-retraces as requests come and go.
+Data plane
+----------
+Full-attention families serve from a **paged KV cache**
+(``serving.kv_cache.PagedKVCache``): admission reserves
+``ceil((prompt + max_new) / page_size)`` fixed-size pages instead of a
+whole ``max_seq`` row, decode gathers pages through per-request page
+tables (``kernels.paged_decode_attention``), and HBM accounting is
+pages-in-use.  Stateful families (SSM state, SWA ring buffers, MLA latent
+caches) keep the dense ``SlotKVCache``.
+
+Every tick is a **mixed prefill/decode tick**: queued prompts are split
+into fixed-size chunks (the pow2 prefill buckets double as chunk sizes)
+and at most ``prefill_budget`` tokens' worth of chunks run per tick —
+round-robin across prefilling requests in SLO-slack order — before the
+full decode batch advances.  A long prompt therefore streams in over
+several ticks while decode latency stays flat, instead of one prefill
+monopolizing the tick (the head-of-line blocking the dense design had).
+Chunk resume state per family: the paged path resumes via (pages already
+written + start offset); SSM/hybrid resume via the carried conv/ssm state
+of a batch-1 staging cache; MLA/SWA prefill monolithically (one
+plen-sized "chunk" charged against the same budget).
 
 Engine-loop lifecycle
 ---------------------
@@ -18,26 +33,31 @@ The engine can run in two modes:
   submitted by different threads still share one decode batch.
 * **background loop**: ``start()`` spawns a daemon thread that owns
   ``step()``.  Callers then only ``submit()`` (returns a ``RequestHandle``)
-  and block on ``handle.result()`` — one request's prefill overlaps another
-  request's decode because the loop admits everything that fits each tick.
+  and block on ``handle.result()`` — one request's prefill chunks overlap
+  another request's decode because every tick mixes both phases.
   ``drain()`` waits for queue+active to empty; ``stop()`` (optionally
   draining first) shuts the thread down.  ``with engine:`` is
   start/stop(drain=True) sugar.
+
+``warmup()`` pre-compiles the decode step and every prefill chunk bucket
+state-neutrally (masked writes land on the paged pool's trash page), so
+the first burst doesn't pay serial JIT walls mid-traffic.
 
 Requests are validated at ``submit()`` time (empty or over-``max_seq``
 prompts raise ``ValueError`` immediately); anything that fails *inside*
 the loop marks the request failed and surfaces the error through its
 future instead of crashing the loop thread.
 
-SLO-aware admission: requests carry ``latency_slo_ms``; each admission
-pass orders the queue by remaining SLO slack (``slo_slack``) so tight-SLO
-requests jump ahead of slack FIFO arrivals — no-SLO requests keep FIFO
-order among themselves behind every SLO-bearing request that is running
-out of budget.  ``stats()["p95_queue_s"]`` feeds the SLO mode of
-``EdgeSystem.autoscale``.
+SLO-aware admission: requests carry ``latency_slo_ms``; both the
+admission pass and the per-tick chunk scheduler order by remaining SLO
+slack (``slo_slack``), so tight-SLO requests jump ahead of slack FIFO
+arrivals.  ``stats()`` reports the prefill-vs-decode tick-time split,
+pages-in-use vs the dense-equivalent HBM, and feeds the SLO mode of
+``EdgeSystem.autoscale`` via ``p95_queue_s``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import threading
@@ -55,7 +75,7 @@ from repro.core.telemetry import DispatchSample, DispatchStats, percentile
 from repro.core.workload import Workload, WorkloadKind
 from repro.models.config import ModelConfig
 from repro.models.model import build_model
-from repro.serving.kv_cache import SlotKVCache
+from repro.serving.kv_cache import PagedKVCache, SlotKVCache, _tree_bytes
 
 
 @dataclasses.dataclass
@@ -68,6 +88,11 @@ class Request:
     submitted_at: float = 0.0
     # filled by the engine
     slot: Optional[int] = None
+    phase: str = "queued"              # queued | prefill | decode
+    pos: int = 0                       # prompt tokens prefilled so far
+    chunks: int = 0                    # prefill chunks executed
+    staging: Any = None                # batch-1 resume cache (stateful chunk)
+    table_row: Any = None              # [1, MP] page-table row (paged)
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None
@@ -125,16 +150,54 @@ def _buckets(max_seq: int) -> List[int]:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, max_slots: int = 4,
                  max_seq: int = 256, params: Optional[Any] = None,
-                 seed: int = 0, mesh=None):
+                 seed: int = 0, mesh=None,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: int = 64,
+                 prefill_budget: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
             jax.random.key(seed))
         self.mesh = mesh
-        self.kv = SlotKVCache(cfg, max_slots, max_seq)
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.buckets = _buckets(max_seq)
+
+        # ---- data-plane selection: paged pools vs dense slots ----------
+        paged_capable = (cfg.family in ("dense", "moe")
+                         and cfg.attn_type == "full"
+                         and cfg.sliding_window == 0
+                         and not cfg.encoder_only)
+        self.paged = paged_capable if paged is None \
+            else bool(paged) and paged_capable
+        if self.paged:
+            # pools live in the compute dtype so the scatter never has to
+            # re-materialize them and buffer donation stays in place
+            self.kv: Any = PagedKVCache(cfg, max_slots, max_seq,
+                                        page_size=page_size,
+                                        num_pages=num_pages,
+                                        dtype=cfg.cdtype)
+        else:
+            self.kv = SlotKVCache(cfg, max_slots, max_seq)
+
+        # ---- chunked-prefill plan --------------------------------------
+        # chunk sizes reuse the pow2 prefill buckets → a bounded compile
+        # set; stateful chunking needs exact lengths, so only the pure-SSM
+        # and windowless hybrid families chunk on the dense path
+        self.chunk_tokens = max(
+            [b for b in self.buckets if b <= prefill_chunk] or
+            [self.buckets[0]])
+        self.chunk_buckets = [b for b in self.buckets
+                              if b <= self.chunk_tokens]
+        self._chunkable_stateful = (
+            cfg.family == "ssm"
+            or (cfg.family == "hybrid" and cfg.sliding_window == 0
+                and cfg.attn_type == "full"))
+        self._chunkable = self.paged or self._chunkable_stateful
+        self.prefill_budget = prefill_budget if prefill_budget is not None \
+            else 2 * self.chunk_tokens
+
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.completed: Dict[int, Request] = {}      # rid → finished request
@@ -143,6 +206,10 @@ class ServingEngine:
         self._rid = itertools.count()
         self.ticks = 0
         self.dispatch_stats = DispatchStats()
+        # per-tick (prefill_s, decode_s, prefill_tokens, decode_rows)
+        self._tick_log: collections.deque = collections.deque(maxlen=512)
+        self._warm = False
+        self.warmup_s = 0.0
 
         # loop lifecycle: the RLock serializes ticks and bookkeeping; the
         # conditions wake the loop on new work and drainers on each tick
@@ -152,9 +219,19 @@ class ServingEngine:
         self._thread: Optional[threading.Thread] = None
         self._running = False
 
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
-        self._prefill = jax.jit(self._prefill_fn,
-                                static_argnames=("bucket",))
+        # `_decode` is ALWAYS the live decode callable (paged or dense) —
+        # tests and tooling monkeypatch it by name
+        if self.paged:
+            self._decode = jax.jit(self._decode_paged_fn,
+                                   donate_argnums=(1,))
+            self._chunk = jax.jit(self._chunk_paged_fn, donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+            self._prefill = jax.jit(self._prefill_fn,
+                                    static_argnames=("bucket",))
+            if self._chunkable_stateful:
+                self._chunk = jax.jit(self._chunk_stateful_fn,
+                                      donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     @property
@@ -165,11 +242,24 @@ class ServingEngine:
             self.cfg.sliding_window > 0
 
     def _prefill_fn(self, params, tokens, last_index, *, bucket: int):
+        """Monolithic whole-prompt prefill (non-chunkable dense path)."""
         caches = self.model.init_caches(1, self.max_seq)
         batch = {"tokens": tokens}
         logits, caches, clen = self.model.prefill(
             params, batch, caches, last_index=last_index)
         return logits, caches, clen
+
+    def _chunk_paged_fn(self, params, pools, tokens, table_row, start,
+                        new_len):
+        """One prefill chunk straight into the request's pages."""
+        return self.model.prefill_chunk(params, {"tokens": tokens}, pools,
+                                        start, new_len,
+                                        page_table=table_row)
+
+    def _chunk_stateful_fn(self, params, staging, tokens, start, new_len):
+        """One exact-length chunk resuming a batch-1 staging cache."""
+        return self.model.prefill_chunk(params, {"tokens": tokens}, staging,
+                                        start, new_len)
 
     def _decode_fn(self, params, caches, tokens, cache_len, active):
         logits, caches = self.model.decode(params, tokens, caches, cache_len)
@@ -177,6 +267,85 @@ class ServingEngine:
         next_tokens = jnp.where(active, next_tokens, tokens)
         new_len = jnp.where(active, cache_len + 1, cache_len)
         return next_tokens, caches, new_len
+
+    def _decode_paged_fn(self, params, pools, page_table, tokens, cache_len,
+                         active):
+        logits, pools = self.model.decode_paged(params, tokens, pools,
+                                                page_table, cache_len)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tokens = jnp.where(active, next_tokens, tokens)
+        new_len = jnp.where(active, cache_len + 1, cache_len)
+        return next_tokens, pools, new_len
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self) -> "ServingEngine":
+        """Pre-compile the decode step and every prefill chunk bucket so
+        the first burst doesn't pay serial JIT walls mid-traffic.
+
+        State-neutral by construction: chunk warmup runs against an
+        all-zero page table row with ``new_len = 0`` (every token is
+        masked padding → writes land on the trash page / are discarded),
+        and decode warmup runs with an all-inactive mask (unowned rows
+        write to the trash page on the paged path; dense rows are
+        overwritten wholesale by the next ``insert``).  Idempotent.
+        """
+        with self._lock:
+            if self._warm:
+                return self
+            t0 = time.monotonic()
+            zero1 = jnp.zeros((1,), jnp.int32)
+            if self.paged:
+                row = jnp.zeros((1, self.kv.pages_per_slot), jnp.int32)
+                logits = None
+                for b in self.chunk_buckets:
+                    # every (chunk bucket, pow2 KV span) pair a long prompt
+                    # can hit — one compile each, all before traffic
+                    for span in self.buckets:
+                        if span < b:
+                            continue
+                        kv_pages = self._kv_span_pages(span)
+                        logits, pools = self._chunk(
+                            self.params, self.kv.pools,
+                            jnp.zeros((1, b), jnp.int32),
+                            row[:, :kv_pages], zero1, zero1)
+                        self.kv.pools = pools
+                # absorb the first-token host programs (argmax, table/len
+                # scatters) — all no-ops on an idle engine's zero state
+                if logits is not None and not self.active and not self.queue:
+                    int(np.asarray(jnp.argmax(logits, -1))[0])
+                    self.last_tokens = self.last_tokens.at[0].set(
+                        jnp.asarray(0, jnp.int32))
+                    self.kv.install(0, row, 0)
+                toks, pools, clen = self._decode(
+                    self.params, self.kv.pools, self.kv.page_table,
+                    self.last_tokens, self.kv.cache_len,
+                    jnp.zeros((self.max_slots,), bool))
+                self.kv.pools = pools
+                self.kv.cache_len = clen
+                self.last_tokens = toks
+            else:
+                if self._chunkable_stateful:
+                    staging = self.model.init_caches(1, self.max_seq)
+                    self._chunk(self.params, staging,
+                                jnp.zeros((1, self.chunk_tokens), jnp.int32),
+                                zero1, zero1)
+                elif not self._stateful:
+                    for b in self.buckets:
+                        self._prefill(self.params,
+                                      jnp.zeros((1, b), jnp.int32),
+                                      zero1, bucket=b)
+                # stateful monolithic (e.g. SWA) compiles per exact prompt
+                # length — nothing to pre-compile without knowing lengths
+                toks, caches, clen = self._decode(
+                    self.params, self.kv.caches, self.last_tokens,
+                    self.kv.cache_len, jnp.zeros((self.max_slots,), bool))
+                self.kv.caches = caches
+                self.kv.cache_len = clen
+                self.last_tokens = toks
+            jax.block_until_ready(self.last_tokens)
+            self.warmup_s = time.monotonic() - t0
+            self._warm = True
+        return self
 
     # ------------------------------------------------------- loop lifecycle
     @property
@@ -294,28 +463,118 @@ class ServingEngine:
     def _fail(self, req: Request, err: Exception):
         req.done = True
         req.error = str(err)
+        req.staging = None
         req.finished_at = time.monotonic()
         self.failed[req.rid] = req
         if req.future is not None and not req.future.done():
             req.future.set_exception(err)
         self._tick.notify_all()
 
+    def _release(self, req: Request):
+        """Return the request's slot (and pages) to the cache manager."""
+        if req.slot is not None:
+            self.kv.free(req.slot)
+            req.slot = None
+        req.staging = None
+        req.table_row = None
+
+    # ---------------------------------------------------------- admission
     def _admit(self):
-        if len(self.queue) > 1 and self.kv.free_slots:
+        """Move queued requests into the prefilling set while capacity
+        (slots, and pages on the paged path) lasts.  No prefill compute
+        happens here — chunks run in the tick's budgeted prefill phase.
+        Head-of-line order is SLO slack, and admission stops at the first
+        request that doesn't fit (no small-request bypass, so large
+        prompts cannot starve)."""
+        if len(self.queue) > 1:
             # SLO-slack admission ordering: least remaining budget first
             now = time.monotonic()
             self.queue.sort(key=lambda r: slo_slack(r, now))
-        while self.queue and self.kv.free_slots:
-            req = self.queue.pop(0)
+        while self.queue:
+            req = self.queue[0]
             plen = len(req.prompt)
             # requests normally can't get here invalid (submit validates),
             # but a bad item must fail its future, not crash the loop
             if plen == 0 or plen > self.max_seq:
+                self.queue.pop(0)
                 self._fail(req, ValueError(
                     f"prompt length {plen} outside (0, {self.max_seq}]"))
                 continue
-            slot = self.kv.alloc()
-            try:
+            if self.paged:
+                # reserve pages for the prompt AND the planned generation
+                # up front: no mid-decode page faults, and pages-in-use is
+                # the engine's true HBM commitment
+                got = self.kv.alloc(min(plen + req.max_new_tokens,
+                                        self.max_seq))
+                if got is None:
+                    break
+                req.slot, req.table_row = got
+            else:
+                if not self.kv.free_slots:
+                    break
+                req.slot = self.kv.alloc()
+                if self._chunkable_stateful:
+                    req.staging = self.model.init_caches(1, self.max_seq)
+            self.queue.pop(0)
+            req.phase = "prefill"
+            req.pos = 0
+            req.admitted_at = time.monotonic()
+            self.active[req.rid] = req
+
+    # ------------------------------------------------------ prefill phase
+    def _chunk_plan(self, req: Request):
+        """(bucket, real) for the request's next chunk: full chunks at
+        ``chunk_tokens``, then the smallest bucket covering the tail
+        (padded on the paged path; stateful chunks are always exact)."""
+        remaining = len(req.prompt) - req.pos
+        if not self._chunkable:
+            return len(req.prompt), len(req.prompt)      # monolithic
+        if self._chunkable_stateful and not self.paged:
+            return None, min(self.chunk_tokens, remaining)  # exact length
+        if remaining >= self.chunk_tokens:
+            return self.chunk_tokens, self.chunk_tokens
+        return next(b for b in self.buckets if b >= remaining), remaining
+
+    def _prefill_cost(self, req: Request) -> int:
+        return self._chunk_plan(req)[1]
+
+    def _kv_span_pages(self, valid_len: int) -> int:
+        """Pages covering the smallest pow2 bucket ≥ ``valid_len`` — the
+        static KV span a prefill chunk gathers/attends over."""
+        span = next(b for b in self.buckets if b >= valid_len)
+        return -(-span // self.kv.page_size)
+
+    def _run_chunk(self, req: Request) -> int:
+        """Execute one prefill chunk (or the whole prompt when the family
+        can't chunk); returns real prompt tokens processed.  On error the
+        request fails and its capacity is returned."""
+        plen = len(req.prompt)
+        bucket, real = self._chunk_plan(req)
+        start = req.pos
+        try:
+            if self.paged:
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :real] = req.prompt[start:start + real]
+                # gather only a pow2-bucketed prefix of the page table:
+                # early chunks attend tens of tokens, not max_seq — the
+                # sliced row's width keys the (chunk, span) compile
+                kv_pages = self._kv_span_pages(start + real)
+                logits, pools = self._chunk(
+                    self.params, self.kv.pools, jnp.asarray(padded),
+                    req.table_row[:, :kv_pages],
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray([start + real], jnp.int32))
+                self.kv.pools = pools
+            elif self._chunkable_stateful:
+                toks = jnp.asarray(req.prompt[None, start:start + real],
+                                   jnp.int32)
+                logits, req.staging = self._chunk(
+                    self.params, req.staging, toks,
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray([start + real], jnp.int32))
+            else:
+                # monolithic: exact length for stateful archs, pow2 bucket
+                # (with last_index masking) for full attention
                 bucket = plen if self._stateful else next(
                     b for b in self.buckets if b >= plen)
                 padded = np.zeros((1, bucket), np.int32)
@@ -323,24 +582,130 @@ class ServingEngine:
                 logits, pcache, _ = self._prefill(
                     self.params, jnp.asarray(padded),
                     jnp.asarray([plen - 1], jnp.int32), bucket=bucket)
-                # prefill yields the FIRST generated token; decode the rest
-                first = int(np.asarray(jnp.argmax(logits, -1))[0])
-                self.kv.insert(pcache, slot, plen)
-                self.last_tokens = self.last_tokens.at[slot].set(first)
-            except Exception as e:  # noqa: BLE001
-                self.kv.free(slot)
+                real = plen
+        except Exception as e:  # noqa: BLE001
+            if self.paged:
+                # the chunk donates the SHARED pools: a runtime failure
+                # leaves every admitted request's cache state suspect, so
+                # fail the batch (mirrors the decode error path) instead
+                # of ticking on with poisoned pools
+                for other in list(self.active.values()):
+                    self._release(other)
+                    del self.active[other.rid]
+                    self._fail(other, e)
+            else:
+                # stateful chunks donate only the request's own staging
+                self._release(req)
+                del self.active[req.rid]
                 self._fail(req, e)
-                continue
-            req.slot = slot
-            req.generated.append(first)
-            req.admitted_at = req.first_token_at = time.monotonic()
-            self.active[req.rid] = req
-            if (req.eos_token is not None and first == req.eos_token) or \
-                    req.max_new_tokens <= 1:
-                self._finish(req, req.first_token_at)
+            return 0
+        req.pos += real
+        req.chunks += 1
+        if req.pos < plen:
+            return real
+        # ---- prompt complete: publish the cache and enter decode -------
+        first = int(np.asarray(jnp.argmax(logits, -1))[0])
+        if self.paged:
+            self.kv.install(req.slot, req.table_row, plen)
+        elif self._chunkable_stateful:
+            self.kv.insert(req.staging, req.slot, plen)
+            req.staging = None
+        else:
+            self.kv.insert(pcache, req.slot, plen)
+        self.last_tokens = self.last_tokens.at[req.slot].set(first)
+        req.generated.append(first)
+        now = time.monotonic()
+        req.first_token_at = now
+        req.phase = "decode"
+        if (req.eos_token is not None and first == req.eos_token) or \
+                req.max_new_tokens <= 1:
+            self._finish(req, now)
+        return real
 
+    def _prefill_tick(self) -> int:
+        """Run up to ``prefill_budget`` prompt tokens of chunks, round-robin
+        over prefilling requests in SLO-slack order.  A monolithic prefill
+        larger than the whole budget only runs as the tick's first prefill
+        work — it can stretch one tick, never ride along with others."""
+        pref = [r for r in self.active.values() if r.phase == "prefill"]
+        if not pref:
+            return 0
+        now = time.monotonic()
+        pref.sort(key=lambda r: slo_slack(r, now))
+        budget = self.prefill_budget
+        total = 0
+        progressed = True
+        while budget > 0 and pref and progressed:
+            progressed = False
+            for req in list(pref):
+                if budget <= 0:
+                    break
+                if req.rid not in self.active:   # failed by a batch error
+                    pref.remove(req)
+                    continue
+                cost = self._prefill_cost(req)
+                if cost > budget and total > 0:
+                    continue                    # wait for a fresh budget
+                done = self._run_chunk(req)
+                total += done
+                budget -= max(done, 1)          # failed chunk: no hot loop
+                progressed = True
+                if req.phase != "prefill":
+                    pref.remove(req)
+        return total
+
+    # ------------------------------------------------------- decode phase
+    def _decode_tick(self) -> int:
+        dec = [r for r in self.active.values() if r.phase == "decode"]
+        if not dec:
+            return 0
+        active_mask = np.zeros((self.max_slots,), bool)
+        for req in dec:
+            active_mask[req.slot] = True
+        try:
+            if self.paged:
+                tokens, pools, new_len = self._decode(
+                    self.params, self.kv.pools, self.kv.page_table,
+                    self.last_tokens, self.kv.cache_len,
+                    jnp.asarray(active_mask))
+                self.kv.pools = pools
+                self.kv.cache_len = new_len
+            else:
+                tokens, self.kv.caches, self.kv.cache_len = self._decode(
+                    self.params, self.kv.caches, self.last_tokens,
+                    self.kv.cache_len, jnp.asarray(active_mask))
+        except Exception as e:  # noqa: BLE001 — a decode error poisons
+            # the donated cache state for EVERY admitted request
+            # (prefilling rows share the pools): fail them all so blocked
+            # handles surface the error instead of hanging
+            for req in list(self.active.values()):
+                self._release(req)
+                del self.active[req.rid]
+                self._fail(req, e)
+            return 0
+        self.last_tokens = tokens
+        toks = np.asarray(tokens)
+        # ONE device sync per tick (not one per request)
+        clens = np.asarray(self.kv.cache_len)
+        now = time.monotonic()
+        finished = []
+        for req in dec:
+            t = int(toks[req.slot])
+            req.generated.append(t)
+            if req.first_token_at is None:
+                req.first_token_at = now
+            if (req.eos_token is not None and t == req.eos_token) or \
+                    len(req.generated) >= req.max_new_tokens or \
+                    int(clens[req.slot]) >= self.kv.max_seq - 1:
+                finished.append(req)
+        for req in finished:
+            self._finish(req, now)
+        return len(dec)
+
+    # ---------------------------------------------------------------- tick
     def step(self) -> int:
-        """One engine tick: admit + one decode for all active slots.
+        """One engine tick: admit, run budgeted prefill chunks, then one
+        decode for all decoding slots.
 
         Thread-safe: the whole tick runs under the engine lock, so exactly
         one tick advances at a time whether it's the background loop or a
@@ -351,54 +716,29 @@ class ServingEngine:
             if not self.active:
                 self._tick.notify_all()
                 return 0
-            active_mask = np.zeros((self.max_slots,), bool)
-            for req in self.active.values():
-                active_mask[req.slot] = True
-            try:
-                tokens, self.kv.caches, self.kv.cache_len = self._decode(
-                    self.params, self.kv.caches, self.last_tokens,
-                    self.kv.cache_len, jnp.asarray(active_mask))
-            except Exception as e:  # noqa: BLE001 — a decode error poisons
-                # the whole batch (caches are donated): fail every active
-                # request so blocked handles surface the error instead of
-                # hanging while the loop re-raises forever
-                for req in list(self.active.values()):
-                    self.kv.free(req.slot)
-                    del self.active[req.rid]
-                    self._fail(req, e)
-                return 0
-            self.last_tokens = tokens
-            toks = np.asarray(tokens)
-            # ONE device sync per tick (not one per request)
-            clens = np.asarray(self.kv.cache_len)
-            now = time.monotonic()
-            finished = []
-            for req in self.active.values():
-                t = int(toks[req.slot])
-                req.generated.append(t)
-                if req.first_token_at is None:
-                    req.first_token_at = now
-                if (req.eos_token is not None and t == req.eos_token) or \
-                        len(req.generated) >= req.max_new_tokens or \
-                        int(clens[req.slot]) >= self.kv.max_seq - 1:
-                    finished.append(req)
-            for req in finished:
-                self._finish(req, now)
-            self.ticks += 1
+            t0 = time.monotonic()
+            prefill_tokens = self._prefill_tick()
+            t1 = time.monotonic()
+            decode_rows = self._decode_tick()
+            t2 = time.monotonic()
+            if prefill_tokens or decode_rows:
+                self.ticks += 1
+                self._tick_log.append((t1 - t0, t2 - t1, prefill_tokens,
+                                       decode_rows))
             self._tick.notify_all()
             return len(self.active)
 
     def _finish(self, req: Request, now: float):
         req.done = True
         req.finished_at = now
-        self.kv.free(req.slot)
+        self._release(req)
         del self.active[req.rid]
         self.completed[req.rid] = req
         self.dispatch_stats.record(DispatchSample(
             workload=f"request-{req.rid}", workload_class="heavy",
             executor_class="container", executor="serving-engine",
             node="local", wall_s=now - req.submitted_at, cold=False,
-            footprint_bytes=0))
+            footprint_bytes=self.kv.bytes_in_use()))
         if req.future is not None and not req.future.done():
             req.future.set_result(req)
 
@@ -422,7 +762,25 @@ class ServingEngine:
                 "queued": len(self.queue),
                 "failed": len(self.failed),
                 "slot_utilization": self.kv.utilization(),
+                "paged": self.paged,
+                "kv_bytes_in_use": self.kv.bytes_in_use(),
+                "kv_capacity_bytes": self.kv.capacity_bytes(),
+                "kv_dense_equivalent_bytes":
+                    self.kv.dense_equivalent_bytes(),
             }
+            if self.paged:
+                out["pages_in_use"] = self.kv.pages_in_use()
+                out["page_utilization"] = self.kv.page_utilization()
+            ticks = list(self._tick_log)
+        # prefill-vs-decode tick-time split (only ticks that did the work)
+        pre = [p for p, _d, ptoks, _n in ticks if ptoks]
+        dec = [d for _p, d, _t, n in ticks if n]
+        for name, xs in (("prefill_tick_s", pre), ("decode_tick_s", dec)):
+            if xs:
+                for q in (50, 95):
+                    out[f"p{q}_{name}"] = percentile(xs, q)
+        if ticks:
+            out["max_prefill_tokens_tick"] = max(t[2] for t in ticks)
         ttfts = [r.first_token_at - r.submitted_at for r in done
                  if r.first_token_at is not None]
         queued = [r.admitted_at - r.submitted_at for r in done
@@ -445,9 +803,16 @@ class EngineExecutor(BaseExecutor):
     ``dispatch`` submits the prompt and blocks on the request's handle:
     with the background loop running (``autostart=True`` starts it on
     first dispatch), concurrent dispatches from different threads batch in
-    the shared engine — one request's prefill overlaps another's decode.
-    Without a loop, the handle drives ticks inline (still lock-serialized,
-    so concurrent callers share the decode batch either way).
+    the shared engine — one request's prefill chunks overlap another's
+    decode.  Without a loop, the handle drives ticks inline (still
+    lock-serialized, so concurrent callers share the decode batch either
+    way).
+
+    Footprints follow the paged accounting: the *static* footprint (what
+    placement reserves) is params + the KV pool's actual capacity — which
+    shrinks when ``num_pages`` undercuts the dense ``max_slots × max_seq``
+    layout — and ``dynamic_footprint_bytes`` reports params + pages
+    currently in use, the number telemetry samples carry.
     """
 
     executor_class = ExecutorClass.CONTAINER
@@ -459,15 +824,17 @@ class EngineExecutor(BaseExecutor):
         self.engine = engine
         self.autostart = autostart
         self.result_timeout = result_timeout
-        # params and cache shapes are fixed at engine init — size them once,
-        # not on every dispatch (the manager records footprint per sample)
-        self._footprint = sum(
-            x.size * x.dtype.itemsize
-            for x in jax.tree.leaves((self.engine.params,
-                                      self.engine.kv.caches)))
+        # params are fixed at engine init — size them once, not per dispatch
+        self._params_bytes = _tree_bytes(self.engine.params)
+        self._footprint = self._params_bytes + \
+            self.engine.kv.capacity_bytes()
 
     def footprint_bytes(self) -> int:
         return self._footprint
+
+    def dynamic_footprint_bytes(self) -> int:
+        """Live HBM commitment: params + KV pages (or slots) in use."""
+        return self._params_bytes + self.engine.kv.bytes_in_use()
 
     def can_run(self, workload: Workload, args) -> bool:
         if workload.kind not in (WorkloadKind.PREFILL, WorkloadKind.DECODE,

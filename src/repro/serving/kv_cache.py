@@ -1,13 +1,23 @@
-"""Slot-based KV cache manager for continuous batching.
+"""KV cache managers for continuous batching: paged pools + dense slots.
 
-The engine owns one big cache tree of ``max_slots`` sequences (stacked along
-the batch axis of every leaf).  Requests claim a slot, prefill produces a
-batch-1 cache that is scattered into the slot, and the decode step advances
-all slots together.  Sliding-window archs keep their ring-buffer semantics
-(the per-layer cache capacity is already window-bounded by
-``attention.cache_capacity``); SSM/hybrid archs store recurrent states in
-the same tree — slot logic is family-agnostic because caches are pytrees
-with a consistent batch axis position per leaf.
+``PagedKVCache`` (full-attention families) replaces the dense
+``max_slots × max_seq`` pre-allocation with a pool of fixed-size pages:
+every layer holds a ``[num_pages, page_size, Hkv, D]`` pool, and each
+admitted request owns a page-table row mapping its logical pages to
+physical ones.  Admission reserves exactly ``ceil(tokens / page_size)``
+pages, so the engine's HBM story is *pages-in-use*, not worst-case rows —
+a half-full engine serving short prompts holds a fraction of the dense
+cache's bytes, and ``num_pages`` can be provisioned below the dense
+equivalent to shrink the static pool itself.  Physical page 0 is the
+trash page: masked writes (bucket padding, unowned decode rows) are
+redirected there, so it is never handed to a request.
+
+``SlotKVCache`` keeps the original dense design for the stateful families
+(SSM state / SWA ring buffers / MLA latent caches), where the per-layer
+cache is already recurrent-state- or window-bounded and paging the
+sequence axis buys nothing.  Both managers expose the same byte
+accounting (``bytes_in_use`` / ``capacity_bytes`` /
+``dense_equivalent_bytes``) so telemetry and admission read one surface.
 """
 from __future__ import annotations
 
@@ -15,11 +25,25 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models import transformer
 
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
 class SlotKVCache:
+    """Dense slot cache: one big tree of ``max_slots`` sequences (stacked
+    along the batch axis of every leaf).  Requests claim a slot, prefill
+    produces a batch-1 cache that is scattered into the slot, and the
+    decode step advances all slots together.  Sliding-window archs keep
+    their ring-buffer semantics (the per-layer cache capacity is already
+    window-bounded by ``attention.cache_capacity``); SSM/hybrid archs
+    store recurrent states in the same tree."""
+
     def __init__(self, cfg: ModelConfig, max_slots: int, max_seq: int,
                  dtype=jnp.bfloat16):
         self.cfg = cfg
@@ -40,6 +64,7 @@ class SlotKVCache:
             p2, p1)
         self.free_slots: List[int] = list(range(max_slots))
         self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+        self._capacity_bytes = _tree_bytes(self.caches)
 
     # ------------------------------------------------------------------
     def alloc(self) -> Optional[int]:
@@ -62,3 +87,114 @@ class SlotKVCache:
 
     def utilization(self) -> float:
         return 1.0 - len(self.free_slots) / self.max_slots
+
+    # ----------------------------------------------------- byte accounting
+    def capacity_bytes(self) -> int:
+        return self._capacity_bytes
+
+    def bytes_in_use(self) -> int:
+        """Dense cache commits whole ``max_seq`` rows per claimed slot."""
+        used = self.max_slots - len(self.free_slots)
+        return self._capacity_bytes * used // self.max_slots
+
+    def dense_equivalent_bytes(self) -> int:
+        return self._capacity_bytes
+
+
+class PagedKVCache:
+    """Page-pool KV manager for full-attention families.
+
+    Host-side allocator state (free page list, per-slot page ownership)
+    plus device-side pools / page table / lengths.  A request's prefill
+    runs against a *standalone* table row (handed out by ``alloc``) and is
+    only installed into the shared device table when the prefill
+    completes — decode therefore never gathers half-written pages, and
+    unowned rows stay all-zero (the trash page)."""
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_seq: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_seq // page_size)     # table width MP
+        if num_pages is None:
+            # full provisioning (+1 trash page): every slot can hold a
+            # max_seq sequence; shrink num_pages to oversubscribe
+            num_pages = max_slots * self.pages_per_slot + 1
+        if num_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"num_pages={num_pages} cannot hold one max_seq sequence "
+                f"({self.pages_per_slot} pages) plus the trash page")
+        self.num_pages = num_pages
+        self.pools = transformer.init_paged_cache_tree(
+            cfg, num_pages, page_size, dtype)
+        self.page_table = jnp.zeros((max_slots, self.pages_per_slot),
+                                    jnp.int32)
+        self.cache_len = jnp.zeros((max_slots,), jnp.int32)
+        self.free_slots: List[int] = list(range(max_slots))
+        self.free_pages: List[int] = list(range(1, num_pages))  # 0 = trash
+        self.slot_pages: Dict[int, List[int]] = {}
+        self._capacity_bytes = _tree_bytes(self.pools)
+        self._page_bytes = self._capacity_bytes // num_pages
+
+    # ------------------------------------------------------------- queries
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-min(n_tokens, self.max_seq) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return bool(self.free_slots) and \
+            len(self.free_pages) >= self.pages_needed(n_tokens)
+
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self.free_pages)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_slots) / self.max_slots
+
+    def page_utilization(self) -> float:
+        return self.pages_in_use() / max(self.num_pages - 1, 1)
+
+    # ----------------------------------------------------- byte accounting
+    def capacity_bytes(self) -> int:
+        return self._capacity_bytes
+
+    def bytes_in_use(self) -> int:
+        return self.pages_in_use() * self._page_bytes
+
+    def dense_equivalent_bytes(self) -> int:
+        """What the dense ``max_slots × max_seq`` cache would allocate."""
+        return self.max_slots * self.pages_per_slot * self._page_bytes
+
+    # ---------------------------------------------------------- allocation
+    def alloc(self, n_tokens: int):
+        """Reserve a slot + pages for ``n_tokens`` (prompt + planned new
+        tokens).  Returns ``(slot, table_row)`` — the row is a standalone
+        [1, MP] device array the prefill chunks write through — or ``None``
+        when slots or pages are exhausted (caller keeps the request
+        queued)."""
+        need = self.pages_needed(n_tokens)
+        if not self.free_slots or len(self.free_pages) < need:
+            return None
+        slot = self.free_slots.pop(0)
+        pages = [self.free_pages.pop(0) for _ in range(need)]
+        self.slot_pages[slot] = pages
+        row = np.zeros((1, self.pages_per_slot), np.int32)
+        row[0, :need] = pages
+        return slot, jnp.asarray(row)
+
+    def install(self, slot: int, table_row, length: int):
+        """Publish a finished prefill: the slot's row becomes visible to
+        the decode batch and its valid length is set."""
+        self.page_table = self.page_table.at[slot].set(table_row[0])
+        self.cache_len = self.cache_len.at[slot].set(length)
+
+    def free(self, slot: int):
+        """Return the slot's pages and zero its table row, so any stale
+        masked decode write for this row lands on the trash page."""
+        assert 0 <= slot < self.max_slots
+        self.free_pages.extend(self.slot_pages.pop(slot, []))
+        self.page_table = self.page_table.at[slot].set(0)
+        self.cache_len = self.cache_len.at[slot].set(0)
+        self.free_slots.append(slot)

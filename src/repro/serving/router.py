@@ -120,7 +120,8 @@ def make_stream_container_builder(scfg: stream_lib.StreamConfig):
 
 
 def make_engine_builder(cfg, max_slots: int = 4, max_seq: int = 128,
-                        params=None, seed: int = 0, autostart: bool = True):
+                        params=None, seed: int = 0, autostart: bool = True,
+                        **engine_kw):
     """Container-class: a continuous-batching ``ServingEngine`` wrapped as
     an executor, so serving deployments go through ``ServiceSpec`` too.
 
@@ -128,12 +129,15 @@ def make_engine_builder(cfg, max_slots: int = 4, max_seq: int = 128,
     background loop on first dispatch — concurrent ``submit_many``
     dispatches then batch in one decode loop instead of serializing whole
     requests; ``autostart=False`` keeps the engine caller-driven (each
-    blocked ``dispatch`` steps the shared engine inline)."""
+    blocked ``dispatch`` steps the shared engine inline).  ``engine_kw``
+    passes the paged-data-plane knobs through (``paged``, ``page_size``,
+    ``num_pages``, ``prefill_chunk``, ``prefill_budget``)."""
     from repro.serving.engine import EngineExecutor, ServingEngine
 
     def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
         engine = ServingEngine(cfg, max_slots=max_slots, max_seq=max_seq,
-                               params=params, seed=seed, mesh=mesh)
+                               params=params, seed=seed, mesh=mesh,
+                               **engine_kw)
         ex = EngineExecutor(f"engine[{cfg.name}]", engine, mesh=mesh,
                             autostart=autostart)
         return ex, ex.footprint_bytes()
