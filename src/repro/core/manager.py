@@ -71,6 +71,8 @@ class ConfigurationManager:
         self.builders: Dict[Tuple[str, WorkloadClass], BuilderFn] = {}
         self.specs: Dict[str, ServiceSpec] = {}
         self.stats = DispatchStats()
+        # weighted fair dispatch: tenant → WFQ weight (default 1.0)
+        self.tenant_weights: Dict[str, float] = {}
         # routing and deployment mutate shared orchestrator state
         # (auto-apply, candidate ordering over the deployments dict);
         # concurrent dispatchers serialize through this, not the dispatch.
@@ -310,10 +312,12 @@ class ConfigurationManager:
             task.value, wclass, dep.executor.name, dep.node_id, wall,
             fresh, service=dep.service, winner=task.winner)
 
-    def _qos_key(self, workload: Workload, args: Tuple) -> Tuple[int, int]:
+    def _qos_key(self, workload: Workload, args: Tuple
+                 ) -> Tuple[Tuple[int, int], str]:
         """Admission-ordering key for a queued item: the QoS rank of the
         spec that will serve it (stronger class first, then higher
-        priority; unroutable items sort as default BURSTABLE)."""
+        priority) plus the serving tenant for weighted fair interleaving;
+        unroutable items sort as default BURSTABLE, unattributed."""
         eclass = EXECUTOR_FOR_CLASS[self.route(workload)]
         with self._route_lock:
             deps = self._candidates(eclass, workload, args)
@@ -323,8 +327,50 @@ class ConfigurationManager:
                          else ExecutorClass.CONTAINER)
                 deps = self._candidates(other, workload, args)
         if not deps:
-            return (QOS_RANK[QoSClass.BURSTABLE], 0)
-        return deps[0].spec.admission_rank()
+            return (QOS_RANK[QoSClass.BURSTABLE], 0), ""
+        return deps[0].spec.admission_rank(), deps[0].spec.tenant
+
+    def set_tenant_weight(self, tenant: str, weight: float):
+        """Weight a tenant's share of intra-class dispatch order in
+        ``submit_many`` (default 1.0; higher = more starts per round)."""
+        if not weight > 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        self.tenant_weights[tenant] = float(weight)
+
+    def _wfq_order(self, work: Sequence[Tuple[Workload, Tuple]]
+                   ) -> List[int]:
+        """Dispatch-start order: QoS classes strictly rank-ordered as
+        before, but *inside* one (class, priority) level tenants
+        interleave by weighted deficit round-robin instead of arrival
+        order — one tenant's burst can no longer put all of its items
+        ahead of a same-class peer's, bounding intra-class latency skew.
+        FIFO is preserved per tenant, and a level with a single tenant
+        degenerates to the old FIFO exactly."""
+        levels: Dict[Tuple[int, int], Dict[str, List[int]]] = {}
+        for i, (w, a) in enumerate(work):
+            rank, tenant = self._qos_key(w, a)
+            levels.setdefault(rank, {}).setdefault(tenant, []).append(i)
+        order: List[int] = []
+        for rank in sorted(levels):
+            queues = levels[rank]
+            if len(queues) == 1:
+                order.extend(next(iter(queues.values())))
+                continue
+            # deficit round-robin, quantum = tenant weight, cost 1/request
+            credit = {t: 0.0 for t in queues}
+            heads = {t: 0 for t in queues}
+            live = list(queues)          # first-arrival tenant order
+            while live:
+                for t in list(live):
+                    q = queues[t]
+                    credit[t] += self.tenant_weights.get(t, 1.0)
+                    while heads[t] < len(q) and credit[t] >= 1.0:
+                        order.append(q[heads[t]])
+                        heads[t] += 1
+                        credit[t] -= 1.0
+                    if heads[t] >= len(q):
+                        live.remove(t)
+        return order
 
     def submit_many(self, items: Sequence[Tuple[Workload, Tuple]],
                     speculative: bool = True, concurrent: bool = True,
@@ -346,8 +392,11 @@ class ConfigurationManager:
         Dispatch is QoS-ordered, not FIFO: items are started in
         ``(QoS class, -priority)`` order of the spec that will serve them,
         so a flood of BEST_EFFORT arrivals cannot starve a GUARANTEED
-        tenant's items in the same batch.  Results still come back in the
-        caller's item order.
+        tenant's items in the same batch.  Within one (class, priority)
+        level, tenants interleave by weighted deficit round-robin
+        (``set_tenant_weight``; default weight 1.0, FIFO per tenant) so a
+        same-class burst from one tenant cannot push a peer's whole batch
+        to the back.  Results still come back in the caller's item order.
 
         Speculative copies are donation-safe: when either racing executor
         donates its input buffers (unikernel images) or the spec is marked
@@ -374,9 +423,9 @@ class ConfigurationManager:
                 raise TypeError(
                     f"work queue item {item!r} is not a (Workload, args) "
                     f"pair — the system queue carries dispatchable work")
-        # stable QoS sort: FIFO within one (class, priority) level
-        order = sorted(range(len(work)),
-                       key=lambda i: (self._qos_key(*work[i]), i))
+        # QoS-ranked start order; weighted deficit round-robin across
+        # tenants inside one (class, priority) level (FIFO per tenant)
+        order = self._wfq_order(work)
         results: List[Any] = [None] * len(work)
         first_error: Optional[Exception] = None
         if concurrent and len(work) > 1:

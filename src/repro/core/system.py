@@ -96,6 +96,26 @@ class EdgeSystem:
         return self.manager.autoscale(service, self.queue.depth(),
                                       per_instance, min_n=min_n, max_n=max_n)
 
+    def on_node_loss(self, node_id: str) -> List[str]:
+        """Inject/observe a node loss: fail the node and redeploy its
+        instances from their stored specs (the chaos harness drives this
+        mid-replay; a failure detector drives it in production).  Returns
+        the instance names that were moved."""
+        with self.manager._route_lock:
+            return self.orchestrator.on_node_failure(node_id)
+
+    def on_node_rejoin(self, node_id: str) -> List[str]:
+        """Heal a lost node: mark it healthy and reconcile every service
+        back to ``spec.replicas``.  Returns the healed instance names."""
+        with self.manager._route_lock:
+            return self.orchestrator.on_node_rejoin(node_id)
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> "EdgeSystem":
+        """Weight a tenant's intra-QoS-class share of ``submit_many``
+        dispatch order (weighted deficit round-robin; default 1.0)."""
+        self.manager.set_tenant_weight(tenant, weight)
+        return self
+
     def on_eviction(self, hook) -> "EdgeSystem":
         """Register ``hook(instance, service, node)`` fired whenever an
         instance is preempted for a stronger QoS class.  Preempted
@@ -195,3 +215,9 @@ class EdgeSystem:
 
     def report(self) -> Dict[str, Any]:
         return self.manager.report()
+
+    def stats_json(self, window: Optional[int] = None,
+                   indent: Optional[int] = None) -> str:
+        """Machine-readable dispatch telemetry (``DispatchStats.to_json``)
+        — what trace scorecards and ``BENCH_*.json`` writers consume."""
+        return self.stats.to_json(window=window, indent=indent)

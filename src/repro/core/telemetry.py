@@ -95,9 +95,22 @@ class DispatchStats:
     def summary(self) -> Dict[str, object]:
         with self._lock:
             samples = list(self.samples)
+        return self._summary_of(samples)
+
+    def windowed(self, window: int = 256) -> Dict[str, object]:
+        """``summary()`` over only the most recent ``window`` samples —
+        the live view scorecards and dashboards want (all-time summaries
+        let a cold-start tail dominate a long-running server)."""
+        with self._lock:
+            samples = self.samples[-window:] if window > 0 else []
+        return self._summary_of(samples)
+
+    @classmethod
+    def _summary_of(cls, samples: Sequence[DispatchSample]
+                    ) -> Dict[str, object]:
         per_class = {
-            wc: self.summarize([s for s in samples
-                                if s.workload_class == wc])
+            wc: cls.summarize([s for s in samples
+                               if s.workload_class == wc])
             for wc in ("heavy", "light")
         }
         per_executor = {}
@@ -127,6 +140,25 @@ class DispatchStats:
         tenants = sorted({s.tenant for s in samples if s.tenant})
         return {t: self.summarize([s for s in samples if s.tenant == t])
                 for t in tenants}
+
+    def to_dict(self, window: Optional[int] = None) -> Dict[str, object]:
+        """JSON-ready view: the stable ``summary()`` shape (or a windowed
+        one), per-tenant split, and the total sample count."""
+        return {
+            "version": 1,
+            "total_samples": len(self),
+            "window": window,
+            "summary": self.summary() if window is None
+            else self.windowed(window),
+            "per_tenant": self.per_tenant(),
+        }
+
+    def to_json(self, window: Optional[int] = None,
+                indent: Optional[int] = None) -> str:
+        """Serialized telemetry for scorecards / ``BENCH_*.json`` files."""
+        import json
+        return json.dumps(self.to_dict(window), sort_keys=True,
+                          indent=indent)
 
     # ------------------------------------------------------------------
     @classmethod

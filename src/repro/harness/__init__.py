@@ -1,0 +1,24 @@
+"""Trace-driven load & chaos harness — the verification backbone.
+
+Replayable workload traces (``trace``), an open-loop wall-clock replayer
+(``replay``), scripted mid-replay fault injection (``chaos``), and
+persisted per-scenario SLO scorecards (``scorecard``).  See README.md in
+this package for the trace schema and how CI consumes the output.
+"""
+from repro.harness.chaos import ChaosAction, ChaosInjector, ChaosRecord
+from repro.harness.replay import (ReplayReport, RequestOutcome,
+                                  TraceReplayer, default_make_item,
+                                  specs_for_trace)
+from repro.harness.scorecard import (build_scorecard, jain_index,
+                                     load_scorecards, write_scorecards)
+from repro.harness.sim import SimExecutor, sim_builder
+from repro.harness.trace import (GENERATORS, Trace, TraceEvent,
+                                 diurnal_chat, iot_burst, longdoc_batch)
+
+__all__ = [
+    "ChaosAction", "ChaosInjector", "ChaosRecord", "ReplayReport",
+    "RequestOutcome", "TraceReplayer", "default_make_item",
+    "specs_for_trace", "build_scorecard", "jain_index", "load_scorecards",
+    "write_scorecards", "SimExecutor", "sim_builder", "GENERATORS",
+    "Trace", "TraceEvent", "diurnal_chat", "iot_burst", "longdoc_batch",
+]
