@@ -1,0 +1,16 @@
+"""Repo-specific static analysis for the repro runtime.
+
+Walks the ``repro`` package with stdlib :mod:`ast` and enforces the
+concurrency/invariant rules the multi-threaded control plane depends on:
+lock-order acyclicity, guarded-by discipline, no blocking calls under a
+held lock, Pallas-kernel hygiene, and dataclass round-trip completeness.
+
+Entry point: ``python -m repro.analysis`` (see ``README.md`` in this
+package for the rule catalog and baseline workflow).
+"""
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.project import Project
+from repro.analysis.rules import ALL_RULES, Rule, run_rules
+
+__all__ = ["Finding", "Severity", "Project", "Rule", "ALL_RULES",
+           "run_rules"]

@@ -1,0 +1,227 @@
+"""KL — Pallas kernel lint (modules under ``kernels/`` only).
+
+- **KL001** (error): a Python ``if``/``while`` whose test depends on a
+  traced value — a ``*_ref`` parameter, a ``pl.program_id(...)`` result,
+  or anything assigned from one.  Python control flow on traced values
+  either fails to trace or silently bakes in one branch; ``@pl.when`` /
+  ``jnp.where`` are the idioms.
+- **KL002** (error): a ``pl.BlockSpec`` block shape that is not static —
+  an element of the shape tuple is a function call or a tainted name.
+  Shapes must be compile-time constants (names bound to Python ints are
+  fine; anything flowing from refs/grid ids is not).
+- **KL003** (error): a public Pallas kernel (top-level function calling
+  ``pl.pallas_call``) with no same-named oracle in ``kernels/ref.py``.
+  ``# analysis: oracle=<name>`` on the ``def`` line maps a kernel to a
+  differently-named oracle (e.g. ``flash_attention`` → ``mha``).
+- **KL004** (error): the kernel/oracle signatures differ beyond the
+  allowed kernel-only tuning/debug parameters (``interpret``,
+  ``block_*``, ...).  Oracles must be drop-in replacements.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.project import ModuleInfo, Project, attr_chain
+from repro.analysis.rules import Rule
+
+REF_MODULE = "ref.py"
+EXCLUDED = {"ref.py", "ops.py", "__init__.py"}
+
+#: parameters a kernel may carry that its oracle does not: interpreter
+#: toggles, block-size tuning, and extended-return switches used by
+#: custom-vjp plumbing
+KERNEL_ONLY_PARAMS = {"interpret", "debug", "block_q", "block_k",
+                      "block_rows", "block_d", "block", "num_warps",
+                      "num_stages", "return_lse"}
+
+
+def _kernel_modules(project: Project):
+    for rel, mod in project.modules.items():
+        parts = rel.split("/")
+        if "kernels" in parts[:-1] and parts[-1] not in EXCLUDED:
+            yield rel, mod
+
+
+def _ref_functions(project: Project) -> Dict[str, ast.FunctionDef]:
+    for rel, mod in project.modules.items():
+        parts = rel.split("/")
+        if "kernels" in parts[:-1] and parts[-1] == REF_MODULE:
+            return {n.name: n for n in mod.tree.body
+                    if isinstance(n, ast.FunctionDef)}
+    return {}
+
+
+def _calls_pallas(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == "pallas_call"
+               for n in ast.walk(fn))
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    return {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+
+
+class _TaintWalker:
+    """Per-function taint: ``*_ref`` params and ``pl.program_id`` results,
+    propagated through plain assignments.  Nested functions inherit the
+    enclosing taint environment (they close over it)."""
+
+    def __init__(self, rule: "KernelLint", mod: ModuleInfo, fn_name: str):
+        self.rule = rule
+        self.mod = mod
+        self.fn_name = fn_name
+        self.findings = []
+
+    def walk_fn(self, fn: ast.FunctionDef, inherited: Set[str]) -> None:
+        tainted = set(inherited)
+        tainted |= {p.arg for p in fn.args.posonlyargs + fn.args.args +
+                    fn.args.kwonlyargs if p.arg.endswith("_ref")}
+        self._block(fn.body, tainted)
+
+    def _block(self, stmts, tainted: Set[str]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.FunctionDef):
+                self.walk_fn(stmt, tainted)
+                continue
+            if isinstance(stmt, ast.Assign):
+                if self._expr_tainted(stmt.value, tainted):
+                    for tgt in stmt.targets:
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+            if isinstance(stmt, (ast.If, ast.While)) and \
+                    self._expr_tainted(stmt.test, tainted):
+                self.findings.append(Finding(
+                    rule="KL001", severity=Severity.ERROR,
+                    path=self.mod.relpath, line=stmt.lineno,
+                    anchor=f"{self.fn_name}:traced-branch",
+                    message=(f"Python {'if' if isinstance(stmt, ast.If) else 'while'} "
+                             f"on a traced value in {self.fn_name} — "
+                             f"use @pl.when / jnp.where")))
+            for _, value in ast.iter_fields(stmt):
+                for sub in (value if isinstance(value, list)
+                            else [value]):
+                    if isinstance(sub, ast.stmt):
+                        self._block([sub], tainted)
+                    elif isinstance(sub, ast.AST) and not \
+                            isinstance(sub, ast.expr):
+                        self._block(
+                            [s for s in ast.iter_child_nodes(sub)
+                             if isinstance(s, ast.stmt)], tainted)
+
+    def _expr_tainted(self, node: Optional[ast.AST],
+                      tainted: Set[str]) -> bool:
+        if node is None:
+            return False
+        # ``x is None`` / ``x is not None`` is a static structure check —
+        # the *choice* of whether x holds a traced value was made in
+        # Python, so branching on presence is fine even when x is traced
+        if isinstance(node, ast.Compare) and \
+                all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops) and \
+                all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain and chain[-1] == "program_id":
+                return True
+        return any(self._expr_tainted(child, tainted)
+                   for child in ast.iter_child_nodes(node))
+
+
+class KernelLint(Rule):
+    family = "KL"
+    name = "kernel-lint"
+    description = ("Pallas kernels: no Python branches on traced values, "
+                   "static BlockSpec shapes, and a signature-matched "
+                   "ref.py oracle per public kernel")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        refs = _ref_functions(project)
+        for rel, mod in _kernel_modules(project):
+            # KL001: traced-value branches, every function in the module
+            for node in mod.tree.body:
+                if isinstance(node, ast.FunctionDef):
+                    tw = _TaintWalker(self, mod, node.name)
+                    tw.walk_fn(node, set())
+                    yield from tw.findings
+            # KL002: dynamic BlockSpec shapes
+            yield from self._block_specs(mod)
+            # KL003/KL004: oracle parity for public pallas kernels
+            for node in mod.tree.body:
+                if not isinstance(node, ast.FunctionDef) or \
+                        node.name.startswith("_") or \
+                        not _calls_pallas(node):
+                    continue
+                pragma = mod.pragma_at(node.lineno, "oracle")
+                oracle_name = pragma.value if pragma else node.name
+                oracle = refs.get(oracle_name or "")
+                if oracle is None:
+                    yield Finding(
+                        rule="KL003", severity=Severity.ERROR,
+                        path=rel, line=node.lineno, anchor=node.name,
+                        message=(f"public kernel {node.name} has no "
+                                 f"ref.py oracle named "
+                                 f"'{oracle_name}'"))
+                    continue
+                kparams = _param_names(node) - KERNEL_ONLY_PARAMS
+                oparams = _param_names(oracle)
+                if kparams != oparams:
+                    missing = sorted(oparams - kparams)
+                    extra = sorted(kparams - oparams)
+                    yield Finding(
+                        rule="KL004", severity=Severity.ERROR,
+                        path=rel, line=node.lineno,
+                        anchor=f"{node.name}~{oracle_name}",
+                        message=(f"kernel {node.name} and oracle "
+                                 f"{oracle_name} signatures differ "
+                                 f"(oracle-only: {missing}, "
+                                 f"kernel-only: {extra})"))
+
+    def _block_specs(self, mod: ModuleInfo) -> Iterator[Finding]:
+        # taint context per enclosing function for shape-element checks
+        for node in mod.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            tainted = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.FunctionDef):
+                    tainted |= {p.arg for p in sub.args.posonlyargs +
+                                sub.args.args + sub.args.kwonlyargs
+                                if p.arg.endswith("_ref")}
+            seen = set()
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                chain = attr_chain(sub.func)
+                if not chain or chain[-1] != "BlockSpec":
+                    continue
+                shape = None
+                for arg in sub.args:
+                    if isinstance(arg, ast.Tuple):
+                        shape = arg
+                        break
+                if shape is None:
+                    continue
+                for el in ast.walk(shape):
+                    bad = (isinstance(el, ast.Call) or
+                           (isinstance(el, ast.Name) and
+                            el.id in tainted))
+                    if bad:
+                        anchor = f"{node.name}:blockspec"
+                        if anchor in seen:
+                            break
+                        seen.add(anchor)
+                        yield Finding(
+                            rule="KL002", severity=Severity.ERROR,
+                            path=mod.relpath, line=sub.lineno,
+                            anchor=anchor,
+                            message=(f"non-static BlockSpec shape in "
+                                     f"{node.name} — block shapes must "
+                                     f"be compile-time constants"))
+                        break

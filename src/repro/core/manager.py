@@ -455,10 +455,12 @@ class ConfigurationManager:
 
     # ------------------------------------------------------------------
     def report(self) -> Dict[str, Any]:
+        with self._route_lock:
+            services = {name: spec.replicas
+                        for name, spec in self.specs.items()}
         return {
             **self.stats.summary(),
-            "services": {name: spec.replicas
-                         for name, spec in self.specs.items()},
+            "services": services,
             "queue": {"enqueued": self.queue.enqueued,
                       "dequeued": self.queue.dequeued,
                       "depth": self.queue.depth()},

@@ -52,5 +52,6 @@ class ImageRegistry:
         return img
 
     def stats(self) -> Dict[str, int]:
-        return {"builds": self.builds, "hits": self.hits,
-                "images": len(self._images)}
+        with self._lock:
+            return {"builds": self.builds, "hits": self.hits,
+                    "images": len(self._images)}

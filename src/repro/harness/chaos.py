@@ -139,6 +139,9 @@ class ChaosInjector:
 
     @staticmethod
     def _hold_lock(lock, wall_s: float):
+        # sleeping under the engine lock is the entire point of the
+        # engine-stall fault: it freezes the loop for wall_s so recovery
+        # behavior is measurable (baselined BL001, not a defect)
         with lock:
             time.sleep(wall_s)
 

@@ -152,6 +152,48 @@ def build_scorecard(report: ReplayReport,
 # persistence
 # --------------------------------------------------------------------------
 
+def diff_scorecards(old: dict, new: dict, *,
+                    attainment_drop: float = 0.05,
+                    p95_ratio: float = 2.0,
+                    p95_slack_s: float = 0.05) -> List[str]:
+    """Regressions between two scorecard envelopes, as human-readable
+    strings (empty list = no regression).
+
+    Only scenarios present in *both* envelopes are compared (a fresh
+    canary run writes one scenario; the committed file carries the full
+    history).  Tolerances are deliberately generous: sim service times
+    are ms-scale and CI runners are noisy, so p95 gets a ratio *and* an
+    absolute slack — a genuine scheduling regression (dense blocking,
+    lost failover) shows up in the hundreds of ms and still trips it.
+    """
+    regressions: List[str] = []
+    old_sc = old.get("scenarios", {})
+    new_sc = new.get("scenarios", {})
+    for name in sorted(set(old_sc) & set(new_sc)):
+        o, n = old_sc[name], new_sc[name]
+        o_att = o.get("slo", {}).get("attainment")
+        n_att = n.get("slo", {}).get("attainment")
+        if o_att is not None and n_att is not None and \
+                n_att < o_att - attainment_drop:
+            regressions.append(
+                f"{name}: SLO attainment {n_att:.4f} fell more than "
+                f"{attainment_drop} below previous {o_att:.4f}")
+        o_p95 = o.get("latency", {}).get("p95_s")
+        n_p95 = n.get("latency", {}).get("p95_s")
+        if o_p95 is not None and n_p95 is not None and \
+                n_p95 > o_p95 * p95_ratio + p95_slack_s:
+            regressions.append(
+                f"{name}: p95 {n_p95 * 1e3:.2f}ms exceeds "
+                f"{p95_ratio}x previous ({o_p95 * 1e3:.2f}ms) + "
+                f"{p95_slack_s * 1e3:.0f}ms slack")
+        o_drop = o.get("guaranteed", {}).get("dropped", 0)
+        n_drop = n.get("guaranteed", {}).get("dropped", 0)
+        if n_drop > o_drop:
+            regressions.append(
+                f"{name}: GUARANTEED drops grew {o_drop} -> {n_drop}")
+    return regressions
+
+
 def load_scorecards(path: str = DEFAULT_PATH) -> dict:
     if not os.path.exists(path):
         return {"version": SCORECARD_VERSION, "scenarios": {}}
@@ -176,3 +218,44 @@ def write_scorecards(cards: Dict[str, dict],
         f.write("\n")
     os.replace(tmp, path)
     return data
+
+
+def main(argv=None) -> int:
+    """``python -m repro.harness.scorecard`` — scorecard diff gate.
+
+    Compares two envelopes scenario-by-scenario and exits 1 on any
+    attainment/p95/GUARANTEED-drop regression beyond tolerance."""
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.harness.scorecard",
+        description="diff two BENCH_traces.json scorecard envelopes")
+    ap.add_argument("--old", required=True,
+                    help="previous (committed) envelope")
+    ap.add_argument("--new", required=True, help="fresh envelope")
+    ap.add_argument("--attainment-drop", type=float, default=0.05)
+    ap.add_argument("--p95-ratio", type=float, default=2.0)
+    ap.add_argument("--p95-slack-s", type=float, default=0.05)
+    args = ap.parse_args(argv)
+    old = load_scorecards(args.old)
+    new = load_scorecards(args.new)
+    shared = sorted(set(old.get("scenarios", {})) &
+                    set(new.get("scenarios", {})))
+    if not shared:
+        print("scorecard-diff: no shared scenarios to compare",
+              file=sys.stderr)
+        return 1
+    regressions = diff_scorecards(
+        old, new, attainment_drop=args.attainment_drop,
+        p95_ratio=args.p95_ratio, p95_slack_s=args.p95_slack_s)
+    for r in regressions:
+        print(f"REGRESSION {r}")
+    print(f"scorecard-diff: {len(shared)} scenario(s) compared "
+          f"({', '.join(shared)}), {len(regressions)} regression(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -60,6 +60,9 @@ class SimExecutor(BaseExecutor):
         self.inflight += 1
         t0 = time.monotonic()
         try:
+            # sleeping inside _serve_lock models a unit-capacity server:
+            # concurrent dispatches queue behind the sleep, which is what
+            # makes sim latency numbers meaningful (baselined BL001)
             with self._serve_lock:
                 with self._stall_lock:
                     wait = self._stall_until - time.monotonic()

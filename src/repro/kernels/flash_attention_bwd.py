@@ -136,6 +136,9 @@ def _dkv_kernel(q_pos_ref, kv_pos_ref, valid_ref,
 # wrapper
 # ---------------------------------------------------------------------------
 
+# no ref.py oracle carries this signature: the backward kernel is
+# validated indirectly — tests compare flash_mha gradients against
+# jax.grad of ref.mha (baselined KL003)
 def flash_attention_bwd(
     q, k, v, out, lse, do, *,
     causal=True, window=0, softcap=0.0,

@@ -349,7 +349,7 @@ class ServingEngine:
 
     # ------------------------------------------------------- loop lifecycle
     @property
-    def loop_running(self) -> bool:
+    def loop_running(self) -> bool:  # analysis: unguarded-ok (racy fast path: single atomic bool/ref reads; lifecycle methods re-check under the lock)
         return self._running and self._thread is not None \
             and self._thread.is_alive()
 
@@ -372,10 +372,11 @@ class ServingEngine:
         with self._lock:
             self._running = False
             self._work.notify_all()
-        t = self._thread
+            # claim the thread ref under the lock: concurrent stop()
+            # callers race the read-join-clear sequence otherwise
+            t, self._thread = self._thread, None
         if t is not None:
             t.join(timeout)
-        self._thread = None
 
     def __enter__(self) -> "ServingEngine":
         return self.start()
@@ -750,7 +751,8 @@ class ServingEngine:
                 if not self.queue and not self.active:
                     break
             self.step()
-        return list(self.completed.values())
+        with self._lock:
+            return list(self.completed.values())
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:

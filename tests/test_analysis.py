@@ -1,0 +1,314 @@
+"""Fixture-based coverage for ``repro.analysis``: each rule fires on its
+seeded violation with an exact, stable finding id, a clean module stays
+silent, pragmas suppress, and the baseline diff/CLI behave.  Ends with
+the same gate CI runs: the real tree against the committed baseline."""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.__main__ import analyze, main
+from repro.analysis.baseline import (diff_findings, load_baseline,
+                                     write_baseline)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+FIXTURES = {
+    "deadlock.py": """
+        import threading
+
+
+        class A:
+            def __init__(self, other: "B" = None):
+                self._lock = threading.Lock()
+                self.other = other
+
+            def ping(self):
+                with self._lock:
+                    self.other.pong_inner()
+
+            def ping_inner(self):
+                with self._lock:
+                    return 1
+
+
+        class B:
+            def __init__(self, other: "A" = None):
+                self._lock = threading.Lock()
+                self.other = other
+
+            def pong(self):
+                with self._lock:
+                    self.other.ping_inner()
+
+            def pong_inner(self):
+                with self._lock:
+                    return 2
+
+
+        class Reenter:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def outer(self):
+                with self._lock:
+                    self.inner()
+
+            def inner(self):
+                with self._lock:
+                    return 3
+    """,
+    "unguarded.py": """
+        import threading
+
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.value = 0
+
+            def bump(self):
+                with self._lock:
+                    self.value += 1
+
+            def bump_unsafe(self):
+                self.value += 1
+
+            def peek(self):  # analysis: unguarded-ok
+                return self.value
+    """,
+    "blocking.py": """
+        import threading
+        import time
+
+
+        class Service:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cond = threading.Condition(self._lock)
+                self._other = threading.Condition()
+
+            def hold(self):
+                with self._lock:
+                    time.sleep(0.1)
+
+            def wait_foreign(self, fut):
+                with self._lock:
+                    return fut.result()
+
+            def join_thread(self, t):
+                with self._lock:
+                    t.join()
+
+            def wait_wrong(self):
+                with self._lock:
+                    self._other.wait()
+
+            def wait_ok(self):
+                with self._lock:
+                    self._cond.wait(timeout=0.1)
+
+            def str_join_fine(self):
+                with self._lock:
+                    return ",".join(["a", "b"])
+    """,
+    "kernels/bad_kernel.py": """
+        from jax.experimental import pallas as pl
+
+
+        def _kernel(x_ref, o_ref):
+            v = x_ref[0]
+            if v > 0:
+                o_ref[0] = v
+            i = pl.program_id(0)
+            while i > 1:
+                i -= 1
+
+
+        def bad_kernel(x, n):
+            return pl.pallas_call(
+                _kernel,
+                in_specs=[pl.BlockSpec((int(n),), lambda i: (i,))],
+                out_shape=None,
+            )(x)
+
+
+        def mismatch_kernel(x, extra):
+            return pl.pallas_call(_kernel)(x, extra)
+    """,
+    "kernels/ref.py": """
+        def mismatch_kernel(x):
+            return x
+    """,
+    "roundtrip.py": """
+        import dataclasses
+
+
+        @dataclasses.dataclass
+        class Thing:
+            a: int
+            b: str = "x"
+            extra: float = 0.0
+            cached: int = 0  # analysis: derived
+
+            def to_dict(self):
+                return {"a": self.a, "b": self.b}
+
+            @classmethod
+            def from_dict(cls, d):
+                return cls(a=d["a"], b=d["b"])
+    """,
+    "clean.py": """
+        import threading
+
+
+        class Clean:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def snapshot(self):
+                with self._lock:
+                    return list(self.items)
+    """,
+}
+
+
+@pytest.fixture(scope="module")
+def fixture_root(tmp_path_factory):
+    root = tmp_path_factory.mktemp("seeded")
+    for rel, src in FIXTURES.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src).lstrip("\n"))
+    return root
+
+
+@pytest.fixture(scope="module")
+def findings(fixture_root):
+    return analyze(fixture_root)[1]
+
+
+@pytest.fixture(scope="module")
+def finding_ids(findings):
+    return {f.id for f in findings}
+
+
+# ------------------------------------------------------------ rule firing
+def test_lock_order_cycle_fires(finding_ids):
+    assert "LO001:deadlock.py:A._lock->B._lock" in finding_ids
+
+
+def test_nonreentrant_reacquire_fires(finding_ids):
+    assert "LO002:deadlock.py:Reenter.outer:Reenter._lock" in finding_ids
+
+
+def test_guarded_by_fires_and_pragma_suppresses(finding_ids):
+    assert "GB001:unguarded.py:Counter.value@bump_unsafe" in finding_ids
+    assert "GB001:unguarded.py:Counter.value@peek" not in finding_ids
+    assert "GB001:unguarded.py:Counter.value@bump" not in finding_ids
+
+
+def test_blocking_while_locked_fires(finding_ids):
+    assert "BL001:blocking.py:Service.hold:time.sleep" in finding_ids
+    assert "BL002:blocking.py:Service.wait_foreign:fut.result" \
+        in finding_ids
+    assert "BL003:blocking.py:Service.join_thread:t.join" in finding_ids
+    assert "BL004:blocking.py:Service.wait_wrong:self._other.wait" \
+        in finding_ids
+
+
+def test_same_lock_condition_wait_and_str_join_are_clean(findings):
+    anchors = {f.anchor for f in findings if f.path == "blocking.py"}
+    assert not any("wait_ok" in a for a in anchors)
+    assert not any("str_join_fine" in a for a in anchors)
+
+
+def test_kernel_lint_fires(finding_ids):
+    assert "KL001:kernels/bad_kernel.py:_kernel:traced-branch" \
+        in finding_ids
+    assert "KL002:kernels/bad_kernel.py:bad_kernel:blockspec" \
+        in finding_ids
+    assert "KL003:kernels/bad_kernel.py:bad_kernel" in finding_ids
+    assert "KL004:kernels/bad_kernel.py:mismatch_kernel~mismatch_kernel" \
+        in finding_ids
+
+
+def test_round_trip_fires_and_derived_pragma_suppresses(finding_ids):
+    assert "RT001:roundtrip.py:Thing.extra" in finding_ids
+    assert "RT002:roundtrip.py:Thing.extra" in finding_ids
+    assert not any("Thing.cached" in i for i in finding_ids)
+    assert not any("Thing.a" in i or "Thing.b" in i for i in finding_ids)
+
+
+def test_clean_module_negative(findings):
+    assert not [f for f in findings if f.path == "clean.py"]
+
+
+def test_finding_ids_carry_no_line_numbers(findings):
+    for f in findings:
+        assert f.id == f"{f.rule}:{f.path}:{f.anchor}"
+        assert str(f.line) not in f.anchor.split(".")
+
+
+# ------------------------------------------------------- baseline workflow
+def test_baseline_roundtrip(tmp_path, findings):
+    path = tmp_path / "baseline.json"
+    write_baseline(path, findings, {})
+    baseline = load_baseline(path)
+    new, known, stale = diff_findings(findings, baseline)
+    assert not new and not stale and len(known) == len(findings)
+
+    # drop one entry → that finding is new again
+    dropped = sorted(baseline)[0]
+    partial = {k: v for k, v in baseline.items() if k != dropped}
+    new, _known, stale = diff_findings(findings, partial)
+    assert [f.id for f in new] == [dropped] and not stale
+
+    # a baselined id that stopped firing is reported stale
+    bogus = dict(baseline)
+    bogus["GB001:gone.py:Gone.x@never"] = {"rule": "GB001", "note": "x"}
+    new, _known, stale = diff_findings(findings, bogus)
+    assert not new and stale == ["GB001:gone.py:Gone.x@never"]
+
+
+def test_rule_family_filter(fixture_root):
+    only_gb = analyze(fixture_root, families=["GB"])[1]
+    assert only_gb and all(f.rule.startswith("GB") for f in only_gb)
+
+
+# --------------------------------------------------------------- CLI gate
+def test_cli_exit_codes(fixture_root, tmp_path, capsys):
+    assert main(["--root", str(fixture_root), "--check"]) == 1
+    base = tmp_path / "b.json"
+    assert main(["--root", str(fixture_root), "--baseline", str(base),
+                 "--update-baseline"]) == 0
+    assert main(["--root", str(fixture_root), "--baseline", str(base),
+                 "--check"]) == 0
+    assert main(["--root", str(fixture_root), "--rules", "NOPE"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_json_report(fixture_root, tmp_path):
+    import json
+    out = tmp_path / "report.json"
+    main(["--root", str(fixture_root), "--json", str(out)])
+    report = json.loads(out.read_text())
+    assert report["new"] and report["modules"] == len(FIXTURES)
+    assert any(e["src"] == "A._lock" and e["dst"] == "B._lock"
+               for e in report["lock_graph"]["edges"])
+
+
+# ------------------------------------------------- the real tree, gated
+def test_repo_tree_clean_against_committed_baseline():
+    """Same gate CI runs: no new findings on src/repro vs the baseline."""
+    root = REPO_ROOT / "src" / "repro"
+    baseline = load_baseline(REPO_ROOT / "analysis_baseline.json")
+    _, findings = analyze(root)
+    new, _known, stale = diff_findings(findings, baseline)
+    assert not new, [f.id for f in new]
+    assert not stale, stale

@@ -1,0 +1,161 @@
+"""Regression tests for the concurrency defects the static-analysis pass
+surfaced (GB001 findings on the pre-analysis tree): lock-free reads of
+lock-guarded state in ``ConfigurationManager.report``,
+``ImageRegistry.stats``, ``ServingEngine.run_until_drained``, and the
+unsynchronized thread handoff in ``ServingEngine.stop``.
+
+The lock-discipline tests are deterministic, not timing races: the
+guarded container is swapped for a subclass that records whether the
+owning lock is held at every read, then the accessor runs once."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (EdgeSystem, ExecutorClass, NodeCapacity,
+                        ServiceSpec, Workload, WorkloadClass,
+                        WorkloadKind)
+from repro.core.registry import ImageRegistry
+from repro.serving.engine import ServingEngine
+
+
+class LockCheckedDict(dict):
+    """Dict recording, per iteration-style read, whether ``lock`` was
+    held by the calling thread (RLock._is_owned is what Condition uses
+    for the same check)."""
+
+    def attach(self, lock):
+        self.lock = lock
+        self.unlocked_reads = []
+        return self
+
+    def _note(self, op):
+        if not self.lock._is_owned():
+            self.unlocked_reads.append(op)
+
+    def items(self):
+        self._note("items")
+        return super().items()
+
+    def values(self):
+        self._note("values")
+        return super().values()
+
+
+class _NullExecutor:
+    name = "null"
+    inflight = 0
+
+    def footprint_bytes(self, workload):
+        return 10
+
+    def can_run(self, workload, args):
+        return True
+
+    def dispatch(self, workload, args):
+        return ("null", workload.name)
+
+
+def _system():
+    system = EdgeSystem()
+    system.add_node("n0", NodeCapacity(chips=1, hbm_bytes=1000,
+                                       flops_per_s=1.0))
+    system.register_builder(
+        "generic", WorkloadClass.HEAVY,
+        lambda workload, mesh: (_NullExecutor(), 10))
+    return system
+
+
+def _spec(name="svc"):
+    return ServiceSpec(name=name,
+                       workload=Workload(name, WorkloadKind.GENERIC),
+                       executor_class=ExecutorClass.CONTAINER,
+                       replicas=1, footprint_hint=10)
+
+
+def test_manager_report_reads_specs_under_route_lock():
+    system = _system()
+    system.apply(_spec())
+    mgr = system.manager
+    checked = LockCheckedDict(mgr.specs).attach(mgr._route_lock)
+    mgr.specs = checked
+    report = mgr.report()
+    assert report["services"] == {"svc": 1}
+    assert checked.unlocked_reads == []
+
+
+def test_registry_stats_snapshot_under_lock():
+    reg = ImageRegistry()
+    observed = []
+    orig_stats = ImageRegistry.stats
+
+    class Probe(ImageRegistry):
+        def stats(self):
+            out = orig_stats(self)
+            observed.append(self._lock.locked())
+            return out
+
+    # the lock must be free again after stats() (it snapshots inside),
+    # and a stats() racing a builder must not blow up mid-increment:
+    # exercised by hammering stats while get_or_build mutates counters
+    probe = Probe()
+    done = threading.Event()
+
+    def hammer():
+        while not done.is_set():
+            probe.stats()
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    try:
+        for _ in range(20):
+            with probe._lock:
+                probe.builds += 1
+    finally:
+        done.set()
+        t.join(5.0)
+    s = probe.stats()
+    assert s["builds"] == 20
+    assert not probe._lock.locked()
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg(exact_config):
+    return exact_config("tinyllama-1.1b")
+
+
+def test_run_until_drained_reads_completed_under_lock(tiny_cfg):
+    eng = ServingEngine(tiny_cfg, max_slots=2, max_seq=32)
+    checked = LockCheckedDict(eng.completed).attach(eng._lock)
+    eng.completed = checked
+    h = eng.submit(np.arange(4) % tiny_cfg.vocab_size, max_new_tokens=2)
+    done = eng.run_until_drained()
+    assert len(done) == 1 and done[0].rid == h.rid
+    assert checked.unlocked_reads == []
+
+
+def test_concurrent_stop_claims_thread_exactly_once(tiny_cfg):
+    """Two racing stop() calls must both return cleanly: exactly one
+    joins the loop thread, neither trips on a half-cleared _thread."""
+    eng = ServingEngine(tiny_cfg, max_slots=2, max_seq=32)
+    eng.start()
+    assert eng.loop_running
+    errors = []
+    barrier = threading.Barrier(2)
+
+    def stopper():
+        try:
+            barrier.wait(timeout=5.0)
+            eng.stop(drain=False, timeout=10.0)
+        except Exception as e:  # pragma: no cover - the regression
+            errors.append(e)
+
+    threads = [threading.Thread(target=stopper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert not errors
+    assert eng._thread is None and not eng.loop_running
+    # stop() on an already-stopped engine stays a no-op
+    eng.stop(drain=False)

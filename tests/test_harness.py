@@ -289,3 +289,56 @@ def test_run_py_rows_to_json():
     assert doc["results"]["fig3/x"]["us_per_call"] == 12.5
     d = doc["results"]["trace/iot"]["derived"]
     assert d["attainment"] == 0.99 and d["p95_ms"] == 1.5
+
+
+# --------------------------------------------------------- scorecard diff
+def _env(**scenarios):
+    return {"version": 1, "scenarios": scenarios}
+
+
+def _card(att=1.0, p95=0.002, dropped=0):
+    return {"slo": {"attainment": att}, "latency": {"p95_s": p95},
+            "guaranteed": {"dropped": dropped}}
+
+
+def test_scorecard_diff_clean_within_tolerance():
+    from repro.harness.scorecard import diff_scorecards
+    old = _env(a=_card(att=1.0, p95=0.002))
+    # small attainment dip and ms-scale p95 noise stay within tolerance
+    new = _env(a=_card(att=0.96, p95=0.030))
+    assert diff_scorecards(old, new) == []
+
+
+def test_scorecard_diff_flags_regressions():
+    from repro.harness.scorecard import diff_scorecards
+    old = _env(a=_card(att=1.0, p95=0.002, dropped=0))
+    new = _env(a=_card(att=0.80, p95=0.500, dropped=2))
+    regs = diff_scorecards(old, new)
+    assert len(regs) == 3
+    assert any("attainment" in r for r in regs)
+    assert any("p95" in r for r in regs)
+    assert any("GUARANTEED" in r for r in regs)
+
+
+def test_scorecard_diff_compares_shared_scenarios_only():
+    from repro.harness.scorecard import diff_scorecards
+    old = _env(a=_card(), gone=_card())
+    new = _env(a=_card(), fresh=_card(att=0.0))   # bad but unshared
+    assert diff_scorecards(old, new) == []
+
+
+def test_scorecard_diff_cli(tmp_path, capsys):
+    from repro.harness.scorecard import main, write_scorecards
+    old_p = str(tmp_path / "old.json")
+    new_p = str(tmp_path / "new.json")
+    write_scorecards({"a": _card(att=1.0)}, path=old_p)
+    write_scorecards({"a": _card(att=1.0, p95=0.003)}, path=new_p)
+    assert main(["--old", old_p, "--new", new_p]) == 0
+    write_scorecards({"a": _card(att=0.5)}, path=new_p)
+    assert main(["--old", old_p, "--new", new_p]) == 1
+    # disjoint scenario sets must fail loudly, not silently pass
+    import os
+    os.remove(new_p)
+    write_scorecards({"b": _card()}, path=new_p)
+    assert main(["--old", old_p, "--new", new_p]) == 1
+    capsys.readouterr()
