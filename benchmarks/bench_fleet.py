@@ -1,0 +1,205 @@
+"""Fleet routing benchmark: KV-aware routing vs round-robin, plus chaos.
+
+Replays the shared-prefix / multi-turn ``fleet_trace`` against a real
+2-replica ``ServingEngine`` fleet (deployed through the control plane by
+``EdgeSystem.deploy_fleet``) three times:
+
+* **fleet-affinity** — prefix-affinity + least-pages routing, with ONE
+  replica wedged mid-burst by an engine-stall fault;
+* **fleet-round-robin** — the same trace and the same fault under blind
+  round-robin, the baseline the routing policy must beat;
+* **fleet-replica-kill** — affinity routing with a mid-replay node loss
+  that takes out one replica: the orchestrator redeploys it and the
+  router reroutes in-flight GUARANTEED work — zero drops allowed.
+
+The acceptance comparison (hard-asserted under ``--check``): affinity
+must see a strictly higher prefix/session hit rate than round-robin AND
+a lower fleet p95 at equal replica count — round-robin keeps routing
+into the stalled engine while affinity's responsiveness probe evades it.
+Scorecards (with the router's fleet stats block) merge into
+``BENCH_traces.json`` next to the sim-trace scenarios.
+
+``--canary`` is the CI mode: 2-replica fleet, shared-prefix burst trace,
+one engine stall — SLO attainment at or above the pinned floor, ZERO
+dropped GUARANTEED requests.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+# same floor as the sim trace-replay canary: the 2.5 s chat SLO dwarfs
+# both the ~100 ms decode latency and the sub-second stall window, so
+# attainment only dips when routing/failover itself regresses
+CANARY_ATTAINMENT_FLOOR = 0.9
+
+ARCH = "tinyllama-1.1b"
+SERVICE = "fleet-chat"
+
+
+def _cfg():
+    from repro.configs import get_reduced_config
+    return get_reduced_config(ARCH)
+
+
+def _trace(seed: int, duration_s: float):
+    """Generate the fleet trace twice — the determinism contract."""
+    from repro.harness import fleet_trace
+
+    trace = fleet_trace(seed=seed, duration_s=duration_s)
+    twin = fleet_trace(seed=seed, duration_s=duration_s)
+    assert trace.to_jsonl() == twin.to_jsonl(), \
+        "fleet trace not byte-for-byte reproducible"
+    return trace
+
+
+def _replay(trace, policy: str, actions, speed: float, cfg=None):
+    """One fleet replay → (scorecard-with-fleet-stats, report)."""
+    from repro.harness import fleet_scorecard, run_fleet_replay
+
+    report, router, _system = run_fleet_replay(
+        trace, cfg if cfg is not None else _cfg(),
+        replicas=2, policy=policy, speed=speed, chaos_actions=actions)
+    try:
+        card = fleet_scorecard(report, router)
+    finally:
+        router.shutdown()
+    card["trace_fingerprint"] = trace.fingerprint()
+    return card, report
+
+
+def _row(name: str, card: dict) -> str:
+    lat = card["latency"]
+    fleet = card["fleet"]
+    return (f"fleet/{name},"
+            f"{lat.get('mean_s', float('nan')) * 1e6:.1f},"
+            f"policy={fleet['policy']};"
+            f"attainment={card['slo']['attainment']:.3f};"
+            f"p95_ms={lat.get('p95_s', float('nan')) * 1e3:.2f};"
+            f"hit_rate={fleet['affinity_hit_rate']:.3f};"
+            f"steals={fleet['steals']};"
+            f"reroutes={fleet['reroutes']};"
+            f"evasions={fleet['stall_evasions']};"
+            f"completed={card['requests']['completed']}/"
+            f"{card['requests']['total']};"
+            f"g_dropped={card['guaranteed']['dropped']}")
+
+
+def run(seed: int = 0, duration_s: float = 6.0, speed: float = 2.0,
+        out: str = "BENCH_traces.json", check: bool = False) -> List[str]:
+    from repro.harness import ChaosAction, write_scorecards
+
+    cfg = _cfg()
+    stall = [ChaosAction(at_s=duration_s * 0.4, kind="engine-stall",
+                         target=f"{SERVICE}/0", duration_s=1.5)]
+    kill = [ChaosAction(at_s=duration_s * 0.45, kind="node-loss",
+                        target="edge0")]
+
+    rows: List[str] = []
+    cards: Dict[str, dict] = {}
+
+    # the head-to-head: identical trace + identical one-replica stall,
+    # only the routing policy differs
+    aff, aff_report = _replay(_trace(seed, duration_s), "affinity",
+                              stall, speed, cfg)
+    rr, _ = _replay(_trace(seed, duration_s), "round-robin",
+                    stall, speed, cfg)
+    cards["fleet-affinity"] = aff
+    cards["fleet-round-robin"] = rr
+    rows.append(_row("affinity", aff))
+    rows.append(_row("round-robin", rr))
+
+    aff_hit, rr_hit = aff["fleet"]["affinity_hit_rate"], \
+        rr["fleet"]["affinity_hit_rate"]
+    aff_p95 = aff["latency"].get("p95_s", float("inf"))
+    rr_p95 = rr["latency"].get("p95_s", 0.0)
+    rows.append(f"fleet/policy-compare,0.0,"
+                f"hit_rate={aff_hit:.3f}vs{rr_hit:.3f};"
+                f"p95_ms={aff_p95 * 1e3:.2f}vs{rr_p95 * 1e3:.2f};"
+                f"affinity_wins={int(aff_hit > rr_hit and aff_p95 < rr_p95)}")
+    if check:
+        assert any(r.kind == "engine-stall" for r in aff_report.chaos), \
+            "engine stall never fired"
+        assert aff_hit > rr_hit, \
+            (f"affinity hit rate {aff_hit:.3f} not above "
+             f"round-robin {rr_hit:.3f}")
+        assert aff_p95 < rr_p95, \
+            (f"affinity p95 {aff_p95 * 1e3:.1f}ms not below "
+             f"round-robin {rr_p95 * 1e3:.1f}ms")
+        for name in ("fleet-affinity", "fleet-round-robin"):
+            assert cards[name]["guaranteed"]["dropped"] == 0, \
+                (name, cards[name]["guaranteed"])
+
+    # replica kill: node loss takes out one engine mid-replay; the
+    # orchestrator redeploys, the router reroutes GUARANTEED in-flight
+    killed, kill_report = _replay(_trace(seed, duration_s), "affinity",
+                                  kill, speed, cfg)
+    cards["fleet-replica-kill"] = killed
+    rows.append(_row("replica-kill", killed))
+    if check:
+        assert any(r.kind == "node-loss" for r in kill_report.chaos), \
+            "node loss never fired"
+        g = killed["guaranteed"]
+        assert g["total"] > 0 and g["dropped"] == 0, g
+
+    write_scorecards(cards, path=out)
+    rows.append(f"fleet/scorecards,0.0,persisted={out};"
+                f"scenarios={len(cards)}")
+    return rows
+
+
+def run_canary(seed: int = 0, out: str = "BENCH_traces.json") -> List[str]:
+    """CI fleet canary: 2-replica fleet, shared-prefix burst trace, one
+    engine stall.  Hard-fails below the attainment floor or on any
+    dropped GUARANTEED request."""
+    from repro.harness import ChaosAction, write_scorecards
+
+    duration_s = 5.0
+    trace = _trace(seed, duration_s)
+    actions = [ChaosAction(at_s=duration_s * 0.4, kind="engine-stall",
+                           target=f"{SERVICE}/0", duration_s=1.5)]
+    card, report = _replay(trace, "affinity", actions, speed=2.0)
+    write_scorecards({"fleet-canary": card}, path=out)
+
+    g = card["guaranteed"]
+    att = card["slo"]["attainment"]
+    fleet = card["fleet"]
+    assert any(r.kind == "engine-stall" for r in report.chaos), \
+        "engine stall never fired"
+    assert g["total"] > 0, "canary trace produced no GUARANTEED requests"
+    assert g["dropped"] == 0, \
+        f"GUARANTEED requests dropped under engine stall: {g}"
+    assert att >= CANARY_ATTAINMENT_FLOOR, \
+        f"SLO attainment {att:.3f} below floor {CANARY_ATTAINMENT_FLOOR}"
+    return [f"fleet/canary,0.0,attainment={att:.3f};"
+            f"hit_rate={fleet['affinity_hit_rate']:.3f};"
+            f"evasions={fleet['stall_evasions']};"
+            f"guaranteed={g['completed']}/{g['total']};"
+            f"floor={CANARY_ATTAINMENT_FLOOR}"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="trace duration in trace-seconds")
+    ap.add_argument("--speed", type=float, default=2.0,
+                    help="replay compression (trace seconds / wall second)")
+    ap.add_argument("--out", default="BENCH_traces.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the policy comparison + zero-drop "
+                         "invariants")
+    ap.add_argument("--canary", action="store_true",
+                    help="CI mode: 2-replica fleet + one engine stall, "
+                         "hard floors")
+    args = ap.parse_args()
+    if args.canary:
+        print("\n".join(run_canary(seed=args.seed, out=args.out)))
+    else:
+        print("\n".join(run(seed=args.seed, duration_s=args.duration,
+                            speed=args.speed, out=args.out,
+                            check=args.check)))
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,14 @@ def run() -> list[str]:
                            concurrent=True)
         par_rps = 32 / (time.perf_counter() - t_par)
 
+        # per-replica latency attribution: which instance caused the p95
+        # (the same split the fleet scorecards use), plus how evenly the
+        # least-inflight router spread the 64 dispatches
+        per_rep = system.stats.per_replica()
+        rep_counts = [v["count"] for v in per_rep.values()]
+        hot = max(per_rep, key=lambda r: per_rep[r]["p95_wall_s"]) \
+            if per_rep else ""
+
         # node failure → redeploy from the stored spec (paper: redistribute)
         t1 = time.perf_counter()
         moved = system.orchestrator.on_node_failure("worker0")
@@ -88,6 +96,10 @@ def run() -> list[str]:
             f"failover_us={failover_us:.0f};"
             f"serial_rps={ser_rps:.0f};overlap_rps={par_rps:.0f};"
             f"overlap_speedup={par_rps / ser_rps:.2f}x;"
+            f"replicas={len(per_rep)};"
+            f"rep_disp_max/min={max(rep_counts)}/{min(rep_counts)};"
+            f"hot_replica={hot}:"
+            f"{per_rep[hot]['p95_wall_s'] * 1e6:.0f}us;"
             f"{stats_suffix(system.stats, 'heavy')}"))
     rows.append(run_tenants())
     return rows

@@ -58,10 +58,10 @@ def write_bench_json(rows: list, path: str = BENCH_JSON) -> dict:
 
 
 def main() -> None:
-    from benchmarks import (bench_paged_serving, bench_trace_replay,
-                            fig3_container_heavy, fig4_unikernel_light,
-                            fig5_hybrid_saving, fig6_processing_time,
-                            fig7_orchestration)
+    from benchmarks import (bench_fleet, bench_paged_serving,
+                            bench_trace_replay, fig3_container_heavy,
+                            fig4_unikernel_light, fig5_hybrid_saving,
+                            fig6_processing_time, fig7_orchestration)
 
     print("name,us_per_call,derived")
     ok = True
@@ -69,7 +69,7 @@ def main() -> None:
     for mod in (fig3_container_heavy, fig4_unikernel_light,
                 fig5_hybrid_saving, fig6_processing_time,
                 fig7_orchestration, bench_paged_serving,
-                bench_trace_replay):
+                bench_trace_replay, bench_fleet):
         try:
             for line in mod.run():
                 rows.append(line)

@@ -11,8 +11,12 @@ Parses every ``*.py`` under the analysis root and extracts, per class:
   ``self.a = param.b`` chains;
 - **per-method events with the held-lock set at each point** — self-field
   reads/writes, attribute-call sites (resolved to ``Class.method`` where
-  the receiver type is known), and lock acquisitions (``with self._x``,
-  ``with self.mgr._route_lock``);
+  the receiver type is known, including receivers reached through typed
+  *local variables*: annotated parameters, assignments from known
+  factories / typed attribute chains / container subscripts, and loop
+  targets over typed containers), and lock acquisitions (``with
+  self._x``, ``with self.mgr._route_lock``, plus explicit timed
+  ``self._x.acquire(...)`` calls recorded as ordering events);
 - **pragmas** — ``# analysis: <directive>`` suppression/metadata comments
   indexed by line.
 
@@ -104,6 +108,8 @@ class ClassInfo:
     node: ast.ClassDef
     locks: Dict[str, LockDecl] = dataclasses.field(default_factory=dict)
     attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: container attr → element class (``Dict[k, V]`` → V, ``List[X]`` → X)
+    elem_types: Dict[str, str] = dataclasses.field(default_factory=dict)
     methods: Dict[str, MethodInfo] = dataclasses.field(default_factory=dict)
 
     def lock_id(self, attr: str) -> Optional[str]:
@@ -180,6 +186,41 @@ def annotation_class(node: Optional[ast.AST]) -> Optional[str]:
     return None
 
 
+_MAP_BASES = frozenset({"Dict", "dict", "OrderedDict", "DefaultDict",
+                        "Mapping", "MutableMapping"})
+_SEQ_BASES = frozenset({"List", "list", "Set", "set", "FrozenSet",
+                        "frozenset", "Deque", "deque", "Sequence",
+                        "Iterable"})
+
+
+def container_elem(node: Optional[ast.AST]) -> Optional[str]:
+    """Element class of a container annotation: ``Dict[k, V]`` → V (the
+    type of ``d[k]`` / ``d.values()`` elements), ``List[X]``/``Set[X]``/
+    ``Deque[X]`` → X, unwrapping ``Optional``/string annotations."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if not isinstance(node, ast.Subscript):
+        return None
+    base = annotation_class(node.value)
+    inner = node.slice
+    if base in _MAP_BASES:
+        if isinstance(inner, ast.Tuple) and len(inner.elts) == 2:
+            return annotation_class(inner.elts[1])
+        return None
+    if base in _SEQ_BASES:
+        if isinstance(inner, ast.Tuple) and inner.elts:
+            inner = inner.elts[0]
+        return annotation_class(inner)
+    if base in ("Optional", "Union"):
+        if isinstance(inner, ast.Tuple) and inner.elts:
+            inner = inner.elts[0]
+        return container_elem(inner)
+    return None
+
+
 def _call_factory(node: ast.AST) -> Optional[str]:
     """Class name when ``node`` is ``X(...)`` / ``mod.X(...)``."""
     if isinstance(node, ast.Call):
@@ -196,47 +237,169 @@ def _call_factory(node: ast.AST) -> Optional[str]:
 class _MethodWalker:
     """Walks one method body tracking the held-lock set; ``with`` bodies
     extend it, nested function/lambda bodies reset it (they run later,
-    in an unknown lock context)."""
+    in an unknown lock context).
+
+    Also tracks best-effort **local variable types** in statement order —
+    seeded from annotated parameters, updated by assignments from known
+    factories / typed attribute chains / container subscripts and by
+    ``for``-loops over ``.values()`` — so locks and calls reached through
+    temporaries (``eng = dep.executor.engine; eng.submit()``) resolve to
+    real classes instead of falling out of the lock graph."""
 
     def __init__(self, project: "Project", cls: ClassInfo,
                  method: MethodInfo):
         self.project = project
         self.cls = cls
         self.method = method
+        args = method.node.args
+        self.var_types: Dict[str, str] = {}
+        #: local → element class of the container it holds (so loops over
+        #: ``live = self._live()`` type their targets)
+        self.var_elem_types: Dict[str, str] = {}
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            t = annotation_class(a.annotation)
+            if t:
+                self.var_types[a.arg] = t
+            elem = container_elem(a.annotation)
+            if elem:
+                self.var_elem_types[a.arg] = elem
 
-    # -- lock resolution ---------------------------------------------------
+    # -- lock / call resolution --------------------------------------------
+
+    def _owner_class(self, chain: Sequence[str]) -> Optional[ClassInfo]:
+        """Class owning ``chain[-1]``: type the root (``self`` or a typed
+        local), then walk the intermediate hops through ``attr_types``."""
+        if chain[0] == "self":
+            cls: Optional[ClassInfo] = self.cls
+        else:
+            cls = self.project.classes.get(
+                self.var_types.get(chain[0], ""))
+        for hop in chain[1:-1]:
+            if cls is None:
+                return None
+            cls = self.project.classes.get(cls.attr_types.get(hop, ""))
+        return cls
+
+    def _chain_lock_id(self, chain: Sequence[str]) -> Optional[str]:
+        if len(chain) >= 2:
+            owner = self._owner_class(chain)
+            if owner is not None:
+                return owner.lock_id(chain[-1])
+        return None
 
     def resolve_lock(self, expr: ast.AST) -> Optional[str]:
         chain = attr_chain(expr)
         if not chain:
             return None
-        if chain[0] == "self" and len(chain) == 2:
-            lid = self.cls.lock_id(chain[1])
-            if lid:
-                return lid
-        elif chain[0] == "self" and len(chain) == 3:
-            t = self.project.classes.get(
-                self.cls.attr_types.get(chain[1], ""))
-            if t is not None:
-                lid = t.lock_id(chain[2])
-                if lid:
-                    return lid
+        lid = self._chain_lock_id(chain)
+        if lid:
+            return lid
         if "lock" in chain[-1].lower():
             return f"?{chain[-1]}"
         return None
 
     def resolve_call(self, chain: Sequence[str]) \
             -> Optional[Tuple[str, str]]:
-        if chain[0] != "self" or len(chain) < 2:
+        if len(chain) < 2:
             return None
-        cls: Optional[ClassInfo] = self.cls
-        for hop in chain[1:-1]:
-            if cls is None:
-                return None
-            cls = self.project.classes.get(cls.attr_types.get(hop, ""))
+        cls = self._owner_class(chain)
         if cls is not None and chain[-1] in cls.methods:
             return (cls.name, chain[-1])
         return None
+
+    # -- local type propagation --------------------------------------------
+
+    def _return_annotation(self, value: ast.AST) -> Optional[ast.AST]:
+        """Return-annotation node of a resolved method call, or None."""
+        if not isinstance(value, ast.Call):
+            return None
+        chain = attr_chain(value.func)
+        if not chain or len(chain) < 2:
+            return None
+        target = self.resolve_call(chain)
+        if target is None:
+            return None
+        return self.project.classes[target[0]].methods[target[1]] \
+            .node.returns
+
+    def _local_type(self, value: Optional[ast.AST]) -> Optional[str]:
+        """Best-effort class name for the RHS of a local assignment."""
+        if value is None:
+            return None
+        factory = _call_factory(value)
+        if factory and factory not in LOCK_FACTORIES and \
+                factory in self.project.classes:
+            return factory
+        ret = self._return_annotation(value)
+        if ret is not None:
+            return annotation_class(ret)
+        if isinstance(value, ast.Name):
+            return self.var_types.get(value.id)
+        chain = attr_chain(value)
+        if chain and len(chain) >= 2:
+            owner = self._owner_class(chain)
+            if owner is not None:
+                return owner.attr_types.get(chain[-1])
+        if isinstance(value, ast.Subscript):
+            # d[k] where d is a typed container → element class
+            base = attr_chain(value.value)
+            if base and len(base) >= 2:
+                owner = self._owner_class(base)
+                if owner is not None:
+                    return owner.elem_types.get(base[-1])
+            elif base and len(base) == 1:
+                return self.var_elem_types.get(base[0])
+        return None
+
+    def _local_elem_type(self, value: Optional[ast.AST]) -> Optional[str]:
+        """Element class of a container-valued RHS (``x = self._live()``
+        with ``-> List[ReplicaRef]`` types later loops over ``x``)."""
+        if value is None:
+            return None
+        if isinstance(value, ast.Name):
+            return self.var_elem_types.get(value.id)
+        ret = self._return_annotation(value)
+        if ret is not None:
+            return container_elem(ret)
+        if isinstance(value, ast.Call) and value.args and \
+                isinstance(value.func, ast.Name) and \
+                value.func.id in ("sorted", "list", "tuple", "reversed"):
+            return self._iter_elem_type(value.args[0])
+        return self._iter_elem_type(value)
+
+    def _iter_elem_type(self, it: ast.AST) -> Optional[str]:
+        """Element class of an iterable expression: a typed local
+        container, ``x.values()`` over a typed mapping, a resolved call
+        with a container return annotation, or a ``sorted``/``list``
+        wrapper of any of those."""
+        if isinstance(it, ast.Name):
+            return self.var_elem_types.get(it.id)
+        if isinstance(it, ast.Call):
+            if isinstance(it.func, ast.Name) and it.args and \
+                    it.func.id in ("sorted", "list", "tuple", "reversed"):
+                return self._iter_elem_type(it.args[0])
+            chain = attr_chain(it.func)
+            if chain and len(chain) >= 3 and chain[-1] == "values" and \
+                    not it.args:
+                owner = self._owner_class(chain[:-1])
+                if owner is not None:
+                    return owner.elem_types.get(chain[-2])
+            ret = self._return_annotation(it)
+            if ret is not None:
+                return container_elem(ret)
+        return None
+
+    def _bind(self, name: str, t: Optional[str],
+              elem: Optional[str] = None) -> None:
+        if t:
+            self.var_types[name] = t
+        else:
+            # rebound to something unknown: forget the stale type
+            self.var_types.pop(name, None)
+        if elem:
+            self.var_elem_types[name] = elem
+        else:
+            self.var_elem_types.pop(name, None)
 
     # -- walking -----------------------------------------------------------
 
@@ -264,6 +427,33 @@ class _MethodWalker:
             # nested defs execute later, in an unknown lock context
             for child in node.body:
                 self._stmt(child, ())
+            return
+        if isinstance(node, ast.Assign):
+            self._expr(node.value, held)
+            for tgt in node.targets:
+                self._expr(tgt, held)
+                if isinstance(tgt, ast.Name):
+                    self._bind(tgt.id, self._local_type(node.value),
+                               self._local_elem_type(node.value))
+            return
+        if isinstance(node, ast.AnnAssign):
+            if node.value is not None:
+                self._expr(node.value, held)
+            self._expr(node.target, held)
+            if isinstance(node.target, ast.Name):
+                self._bind(node.target.id,
+                           annotation_class(node.annotation) or
+                           self._local_type(node.value),
+                           container_elem(node.annotation) or
+                           self._local_elem_type(node.value))
+            return
+        if isinstance(node, ast.For):
+            self._expr(node.iter, held)
+            self._expr(node.target, held)
+            if isinstance(node.target, ast.Name):
+                self._bind(node.target.id, self._iter_elem_type(node.iter))
+            for child in node.body + node.orelse:
+                self._stmt(child, held)
             return
         # expressions embedded in this statement (not in nested blocks)
         for _, value in ast.iter_fields(node):
@@ -310,6 +500,14 @@ class _MethodWalker:
                         chain=tuple(chain),
                         target=self.resolve_call(chain),
                         line=sub.lineno, held=held, node=sub))
+                    if chain[-1] == "acquire" and len(chain) >= 3:
+                        # explicit (often timed) lock.acquire(): recorded
+                        # as an acquisition *event* for ordering edges;
+                        # it does not open a held region
+                        lid = self._chain_lock_id(chain[:-1])
+                        if lid is not None:
+                            self.method.acquires.append(AcquireSite(
+                                lock_id=lid, line=sub.lineno, held=held))
 
 
 # --------------------------------------------------------------------------
@@ -403,6 +601,19 @@ class Project:
                           for a in meth.node.args.args +
                           meth.node.args.kwonlyargs}
                 for stmt in ast.walk(meth.node):
+                    if isinstance(stmt, ast.AnnAssign):
+                        chain = attr_chain(stmt.target)
+                        if not chain or chain[0] != "self" or \
+                                len(chain) != 2:
+                            continue
+                        attr = chain[1]
+                        ann_t = annotation_class(stmt.annotation)
+                        if ann_t:
+                            info.attr_types.setdefault(attr, ann_t)
+                        elem = container_elem(stmt.annotation)
+                        if elem:
+                            info.elem_types.setdefault(attr, elem)
+                        continue
                     if not isinstance(stmt, ast.Assign):
                         continue
                     for tgt in stmt.targets:

@@ -10,6 +10,14 @@ transitive lock set (fixpoint over the call graph) contains ``B.y``.
 - **LO002** (error): a non-reentrant ``threading.Lock`` re-acquired on a
   path that already holds it — self-deadlock.  RLocks and condition
   re-entry on the same underlying lock are exempt.
+- **LO003** (warning): a lock edge that *crosses top-level packages*
+  (e.g. a ``fleet`` router holding its lock into a ``serving`` engine
+  probe).  Not a defect by itself, but every such edge widens the
+  surface where an independent change in the other package can close a
+  cycle — each one must be acknowledged in the baseline with a note
+  explaining the ordering contract.  Anchored ``src->dst``; the package
+  is the first path segment of the lock-owning class's module, so
+  single-directory trees (the test fixtures) never fire it.
 """
 from __future__ import annotations
 
@@ -132,6 +140,26 @@ class LockOrder(Rule):
                 line=line, anchor=anchor,
                 message=("lock-order cycle (deadlock risk): "
                          + "; ".join(evidence)))
+
+        # LO003: lock edges that cross top-level packages
+        def package_of(lock_id: str) -> str:
+            cls = project.classes.get(lock_id.split(".", 1)[0])
+            if cls is None:
+                return ""
+            parts = cls.module.split("/")
+            return parts[0] if len(parts) > 1 else ""
+
+        for (src, dst), ev in sorted(edges.items()):
+            sp, dp = package_of(src), package_of(dst)
+            if not sp or not dp or sp == dp:
+                continue
+            mod, where, line = ev[0]
+            yield Finding(
+                rule="LO003", severity=Severity.WARNING, path=mod,
+                line=line, anchor=f"{src}->{dst}",
+                message=(f"cross-package lock edge {src} ({sp}) -> "
+                         f"{dst} ({dp}) at {where}; acknowledge the "
+                         f"ordering contract in the baseline"))
 
         # LO002: plain Lock re-acquired while already held
         reentrant = set()

@@ -294,6 +294,16 @@ class AdmissionController:
         self.decisions.append(d)
         return d
 
+    def instance_commitments(self) -> Dict[str, Dict[str, object]]:
+        """Per-instance charged HBM: ``{instance: {node, tenant,
+        hbm_bytes}}`` — shows each fleet replica's static reservation was
+        individually admitted (fleet benchmarks/tests assert on this)."""
+        with self._lock:
+            return {key: {"node": node_id, "tenant": tenant,
+                          "hbm_bytes": hbm}
+                    for (node_id, key), (tenant, hbm)
+                    in sorted(self._keys.items())}
+
     def tenant_usage(self) -> Dict[str, Dict[str, float]]:
         with self._lock:
             tenants = set(self._tenant_hbm) | set(self._tenant_flops) \

@@ -146,12 +146,16 @@ class ConfigurationManager:
         The observation is the worse of (a) the p95 dispatch wall over the
         service's most recent ``window`` samples — a window, not all-time,
         so a transient slowdown (cold compiles, failover) stops driving
-        scale-ups once latency recovers — and (b) ``p95_queue_s`` from any
-        engine-backed replica's ``ServingEngine.stats()``.  Over SLO →
-        scale up proportionally (observed/SLO); under half the SLO → shed
-        one replica (the paper: scale-down conserves energy).  Scale-ups
-        past available capacity stop where placement stops — best-effort,
-        like failover.
+        scale-ups once latency recovers — and (b) the **fleet-aggregate**
+        queue p95: recent admission queue waits pooled across every
+        engine-backed replica (``ServingEngine.queue_samples()``), so N
+        idle replicas beside one hot one read as fleet-level pressure in
+        proportion to traffic share rather than the hot replica's p95
+        alone (engines without the sampler fall back to their own
+        ``p95_queue_s``).  Over SLO → scale up proportionally
+        (observed/SLO); under half the SLO → shed one replica (the paper:
+        scale-down conserves energy).  Scale-ups past available capacity
+        stop where placement stops — best-effort, like failover.
         """
         with self._route_lock:
             spec = self.specs.get(service)
@@ -166,11 +170,19 @@ class ConfigurationManager:
                      for s in self.stats.samples_for(service=service)]
             walls = walls[-window:]
             observed = percentile(walls, 95) if walls else 0.0
+            queue_waits: List[float] = []
             for dep in instances:
                 engine = getattr(dep.executor, "engine", None)
-                if engine is not None:
+                if engine is None:
+                    continue
+                sampler = getattr(engine, "queue_samples", None)
+                if sampler is not None:
+                    queue_waits.extend(sampler())
+                else:
                     observed = max(observed,
                                    engine.stats().get("p95_queue_s", 0.0))
+            if queue_waits:
+                observed = max(observed, percentile(queue_waits, 95))
             if not observed > 0:                  # no data yet (or NaN)
                 return n
             if observed > slo_s:
@@ -245,7 +257,8 @@ class ConfigurationManager:
             # engines report KV pages-in-use here
             footprint_bytes=dep.executor.dynamic_footprint_bytes(),
             winner=winner, backup_launched=backup_launched,
-            service=dep.service, tenant=dep.spec.tenant))
+            service=dep.service, tenant=dep.spec.tenant,
+            replica=dep.name))
 
     def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
         t0 = time.monotonic()

@@ -43,6 +43,7 @@ class DispatchSample:
     backup_launched: bool = False
     service: str = ""              # owning ServiceSpec name ("" = ad-hoc)
     tenant: str = ""               # owning spec's tenant ("" = unattributed)
+    replica: str = ""              # serving instance ("svc/0"; "" = unknown)
 
 
 class DispatchStats:
@@ -141,9 +142,20 @@ class DispatchStats:
         return {t: self.summarize([s for s in samples if s.tenant == t])
                 for t in tenants}
 
+    def per_replica(self) -> Dict[str, Dict[str, float]]:
+        """Latency summary split by serving replica — lets fig7 and the
+        fleet scorecards attribute a p95 to the instance that caused it
+        instead of blending the fleet."""
+        with self._lock:
+            samples = list(self.samples)
+        replicas = sorted({s.replica for s in samples if s.replica})
+        return {r: self.summarize([s for s in samples if s.replica == r])
+                for r in replicas}
+
     def to_dict(self, window: Optional[int] = None) -> Dict[str, object]:
         """JSON-ready view: the stable ``summary()`` shape (or a windowed
-        one), per-tenant split, and the total sample count."""
+        one), per-tenant and per-replica splits, and the total sample
+        count."""
         return {
             "version": 1,
             "total_samples": len(self),
@@ -151,6 +163,7 @@ class DispatchStats:
             "summary": self.summary() if window is None
             else self.windowed(window),
             "per_tenant": self.per_tenant(),
+            "per_replica": self.per_replica(),
         }
 
     def to_json(self, window: Optional[int] = None,

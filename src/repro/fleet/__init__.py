@@ -1,0 +1,16 @@
+"""Replicated serving data plane: FleetRouter over N ServingEngines."""
+from repro.fleet.affinity import (DEFAULT_BLOCK, PrefixAffinityIndex,
+                                  prefix_fingerprints)
+from repro.fleet.router import (POLICIES, FleetHandle, FleetRequest,
+                                FleetRouter, ReplicaRef)
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "FleetHandle",
+    "FleetRequest",
+    "FleetRouter",
+    "POLICIES",
+    "PrefixAffinityIndex",
+    "ReplicaRef",
+    "prefix_fingerprints",
+]

@@ -6,6 +6,9 @@ persisted per-scenario SLO scorecards (``scorecard``).  See README.md in
 this package for the trace schema and how CI consumes the output.
 """
 from repro.harness.chaos import ChaosAction, ChaosInjector, ChaosRecord
+from repro.harness.engine_replay import (fleet_scorecard, fleet_submit_fn,
+                                         fleet_trace, make_engine_item,
+                                         run_fleet_replay, session_tokens)
 from repro.harness.replay import (ReplayReport, RequestOutcome,
                                   TraceReplayer, default_make_item,
                                   specs_for_trace)
@@ -21,4 +24,6 @@ __all__ = [
     "specs_for_trace", "build_scorecard", "jain_index", "load_scorecards",
     "write_scorecards", "SimExecutor", "sim_builder", "GENERATORS",
     "Trace", "TraceEvent", "diurnal_chat", "iot_burst", "longdoc_batch",
+    "fleet_scorecard", "fleet_submit_fn", "fleet_trace",
+    "make_engine_item", "run_fleet_replay", "session_tokens",
 ]

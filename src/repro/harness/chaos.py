@@ -121,9 +121,16 @@ class ChaosInjector:
             return {}
         raise ValueError(action.kind)       # unreachable: validated on init
 
-    def _stall_service(self, service: str, wall_s: float) -> Dict[str, Any]:
-        stalled = 0
-        for dep in self.system.instances(service):
+    def _stall_service(self, target: str, wall_s: float) -> Dict[str, Any]:
+        """Freeze every executor of a service — or ONE replica when
+        ``target`` names a single instance (``"svc/0"``), the fleet
+        scenario: one engine wedges, the router must route around it."""
+        deps = self.system.instances(target)
+        if not deps:
+            dep = self.system.orchestrator.deployments.get(target)
+            deps = [dep] if dep is not None else []
+        stalled = []
+        for dep in deps:
             engine = getattr(dep.executor, "engine", None)
             if engine is not None and hasattr(engine, "_lock"):
                 t = threading.Thread(
@@ -131,11 +138,12 @@ class ChaosInjector:
                     name=f"chaos-stall-{dep.name}", daemon=True)
                 t.start()
                 self._stall_threads.append(t)
-                stalled += 1
+                stalled.append(dep.name)
             elif hasattr(dep.executor, "stall"):
                 dep.executor.stall(wall_s)
-                stalled += 1
-        return {"stalled": stalled, "wall_s": wall_s}
+                stalled.append(dep.name)
+        return {"stalled": len(stalled), "instances": stalled,
+                "wall_s": wall_s}
 
     @staticmethod
     def _hold_lock(lock, wall_s: float):

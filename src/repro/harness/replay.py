@@ -134,12 +134,19 @@ class TraceReplayer:
                  chaos: Optional[ChaosInjector] = None,
                  max_workers: int = 32, requeue_attempts: int = 2,
                  requeue_delay_s: float = 0.05,
-                 drain_timeout_s: float = 60.0):
+                 drain_timeout_s: float = 60.0,
+                 submit_fn=None):
         if speed <= 0:
             raise ValueError("speed must be positive")
         self.system = system
         self.trace = trace
         self.make_item = make_item or default_make_item
+        # alternate data plane: ``submit_fn(workload, args)`` replaces
+        # ``system.submit`` (the fleet replay routes through a
+        # ``FleetRouter`` instead of the manager's dispatch path) — it
+        # must return a DispatchResult-shaped object (``.output``,
+        # ``.wall_s``) and may raise ``AdmissionError`` for refusals
+        self.submit_fn = submit_fn
         self.speed = speed
         self.chaos = chaos
         self.max_workers = max_workers
@@ -212,7 +219,8 @@ class TraceReplayer:
         status, err, res, requeues = "failed", "", None, 0
         for i in range(attempts):
             try:
-                res = self.system.submit(workload, args)
+                submit = self.submit_fn or self.system.submit
+                res = submit(workload, args)
                 status = "ok"
                 break
             except AdmissionError as e:

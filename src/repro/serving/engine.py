@@ -63,7 +63,7 @@ import itertools
 import threading
 import time
 from concurrent.futures import Future
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +129,12 @@ class RequestHandle:
     def rid(self) -> int:
         return self._req.rid
 
+    @property
+    def future(self) -> Future:
+        """The request's completion future (the fleet router chains its
+        own completion off this without polling)."""
+        return self._req.future
+
     def done(self) -> bool:
         return self._req.future.done()
 
@@ -154,8 +160,10 @@ class ServingEngine:
                  paged: Optional[bool] = None, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefill_chunk: int = 64,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 replica_id: str = ""):
         self.cfg = cfg
+        self.replica_id = replica_id     # fleet membership tag ("" = solo)
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
             jax.random.key(seed))
@@ -206,6 +214,12 @@ class ServingEngine:
         self._rid = itertools.count()
         self.ticks = 0
         self.dispatch_stats = DispatchStats()
+        # fleet routing surfaces: recent queue waits (admission-time) for
+        # fleet-aggregate p95 autoscale, prefix-affinity hit counters
+        self.recent_queue_s: collections.deque = collections.deque(
+            maxlen=256)
+        self.prefix_hits = 0
+        self.prefix_misses = 0
         # per-tick (prefill_s, decode_s, prefill_tokens, decode_rows)
         self._tick_log: collections.deque = collections.deque(maxlen=512)
         self._warm = False
@@ -461,6 +475,70 @@ class ServingEngine:
             self._work.notify_all()
         return RequestHandle(self, req)
 
+    # -------------------------------------------------- fleet probe surface
+    # The fleet router scores and probes replicas while it may itself be
+    # holding the router lock, and a chaos-stalled engine holds THIS lock
+    # for seconds — so every probe below is either lock-free (racy O(1)
+    # snapshots are fine for load scoring) or takes the lock with a
+    # bounded timeout.  Blocking here would let one stalled replica
+    # head-of-line-block routing for the whole fleet.
+
+    def queue_depth(self) -> int:
+        """Racy queued-request count (router steal trigger)."""
+        return len(self.queue)  # analysis: unguarded-ok — racy len() snapshot for routing
+
+    def load(self) -> Tuple[int, int, int]:
+        """Racy ``(queued, active, kv_bytes_in_use)`` snapshot — the
+        router's least-pages / least-inflight scoring tuple."""
+        return (len(self.queue), len(self.active), self.kv.bytes_in_use())  # analysis: unguarded-ok — racy load snapshot for routing
+
+    def responsive(self, timeout: float = 0.05) -> bool:
+        """Can the engine lock be taken within ``timeout``?  False means
+        the loop is wedged or chaos-stalled; the router routes around."""
+        if not self._lock.acquire(timeout=timeout):
+            return False
+        self._lock.release()
+        return True
+
+    def cancel_queued(self, rid: int,
+                      timeout: float = 0.1) -> Optional[Request]:
+        """Remove a still-queued request (work stealing / orphan cleanup).
+
+        Returns the request if it was cancelled, ``None`` if it already
+        started (active decodes own KV pages and stay put) or the lock
+        could not be taken in time.  The request's future is left
+        unresolved — the caller re-binds it elsewhere.
+        """
+        if not self._lock.acquire(timeout=timeout):
+            return None
+        try:
+            for i, req in enumerate(self.queue):  # analysis: unguarded-ok — held via timed acquire above
+                if req.rid == rid:
+                    self.queue.pop(i)  # analysis: unguarded-ok — held via timed acquire above
+                    req.phase = "cancelled"
+                    return req
+            return None
+        finally:
+            self._lock.release()
+
+    def note_prefix(self, hit: bool) -> None:
+        """Router-reported prefix-affinity outcome for this replica."""
+        if hit:
+            self.prefix_hits += 1  # analysis: unguarded-ok — monotonic counter, router thread only
+        else:
+            self.prefix_misses += 1  # analysis: unguarded-ok — monotonic counter, router thread only
+
+    def queue_samples(self) -> List[float]:
+        """Recent admission queue waits (seconds) — pooled across
+        replicas for fleet-aggregate p95 autoscale."""
+        with self._lock:
+            return list(self.recent_queue_s)
+
+    def recent_queue_p95(self) -> float:
+        """Racy p95 of recent queue waits (router steal trigger)."""
+        xs = list(self.recent_queue_s)  # analysis: unguarded-ok — deque snapshot for routing
+        return percentile(xs, 95) if xs else 0.0
+
     def _fail(self, req: Request, err: Exception):
         req.done = True
         req.error = str(err)
@@ -520,6 +598,7 @@ class ServingEngine:
             req.phase = "prefill"
             req.pos = 0
             req.admitted_at = time.monotonic()
+            self.recent_queue_s.append(req.admitted_at - req.submitted_at)
             self.active[req.rid] = req
 
     # ------------------------------------------------------ prefill phase
@@ -739,7 +818,8 @@ class ServingEngine:
             workload=f"request-{req.rid}", workload_class="heavy",
             executor_class="container", executor="serving-engine",
             node="local", wall_s=now - req.submitted_at, cold=False,
-            footprint_bytes=self.kv.bytes_in_use()))
+            footprint_bytes=self.kv.bytes_in_use(),
+            replica=self.replica_id))
         if req.future is not None and not req.future.done():
             req.future.set_result(req)
 
@@ -762,6 +842,13 @@ class ServingEngine:
                 "ticks": self.ticks,
                 "active": len(self.active),
                 "queued": len(self.queue),
+                "queue_depth": len(self.queue),
+                "replica_id": self.replica_id,
+                "prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses,
+                "prefix_hit_rate": self.prefix_hits /
+                (self.prefix_hits + self.prefix_misses)
+                if (self.prefix_hits + self.prefix_misses) else 0.0,
                 "failed": len(self.failed),
                 "slot_utilization": self.kv.utilization(),
                 "paged": self.paged,
@@ -773,7 +860,10 @@ class ServingEngine:
             if self.paged:
                 out["pages_in_use"] = self.kv.pages_in_use()
                 out["page_utilization"] = self.kv.page_utilization()
+            recent = list(self.recent_queue_s)
             ticks = list(self._tick_log)
+        if recent:
+            out["p95_queue_recent_s"] = percentile(recent, 95)
         # prefill-vs-decode tick-time split (only ticks that did the work)
         pre = [p for p, _d, ptoks, _n in ticks if ptoks]
         dec = [d for _p, d, _t, n in ticks if n]

@@ -158,6 +158,56 @@ FIXTURES = {
             def from_dict(cls, d):
                 return cls(a=d["a"], b=d["b"])
     """,
+    "fleetpkg/router.py": """
+        import threading
+        from typing import Dict, List
+
+
+        class MiniRouter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._members: Dict[str, "MiniEngine"] = {}
+
+            def kick(self, key):
+                ref = self._members[key]
+                with self._lock:
+                    ref.submit()
+
+            def sweep(self):
+                with self._lock:
+                    for eng in sorted(self.live()):
+                        eng.probe()
+
+            def live(self) -> List["MiniEngine"]:
+                return list(self._members.values())
+
+            def on_done(self):
+                with self._lock:
+                    return 1
+    """,
+    "enginepkg/engine.py": """
+        import threading
+
+
+        class MiniEngine:
+            def __init__(self, router: "MiniRouter" = None):
+                self._lock = threading.Lock()
+                self.router = router
+
+            def submit(self):
+                with self._lock:
+                    return 0
+
+            def probe(self):
+                ok = self._lock.acquire(timeout=0.05)
+                if ok:
+                    self._lock.release()
+                return ok
+
+            def finish(self):
+                with self._lock:
+                    self.router.on_done()
+    """,
     "clean.py": """
         import threading
 
@@ -243,6 +293,33 @@ def test_round_trip_fires_and_derived_pragma_suppresses(finding_ids):
     assert "RT002:roundtrip.py:Thing.extra" in finding_ids
     assert not any("Thing.cached" in i for i in finding_ids)
     assert not any("Thing.a" in i or "Thing.b" in i for i in finding_ids)
+
+
+def test_fleet_cycle_and_cross_package_edges(finding_ids):
+    # router↔engine cycle: the router→engine half only exists because
+    # the walker types locals (``ref = self._members[key]``, loops over
+    # a ``List["MiniEngine"]`` return) — without propagation the cycle
+    # is invisible
+    assert ("LO001:enginepkg/engine.py:"
+            "MiniEngine._lock->MiniRouter._lock") in finding_ids
+    # both halves cross top-level packages → LO003 each way
+    assert ("LO003:fleetpkg/router.py:"
+            "MiniRouter._lock->MiniEngine._lock") in finding_ids
+    assert ("LO003:enginepkg/engine.py:"
+            "MiniEngine._lock->MiniRouter._lock") in finding_ids
+
+
+def test_local_propagation_builds_router_engine_edges(fixture_root):
+    from repro.analysis.project import Project
+    from repro.analysis.rules.lock_order import build_lock_graph
+    edges = build_lock_graph(Project(fixture_root))
+    wheres = {w for _, w, _ in
+              edges[("MiniRouter._lock", "MiniEngine._lock")]}
+    # container-subscript local (``ref``) and loop-target local
+    # (``eng``) both resolve; ``probe``'s timed ``acquire`` is recorded
+    # as an acquisition event so ``sweep`` contributes the edge too
+    assert "MiniRouter.kick" in wheres
+    assert "MiniRouter.sweep" in wheres
 
 
 def test_clean_module_negative(findings):
