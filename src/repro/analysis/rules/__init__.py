@@ -2,7 +2,7 @@
 
 Every rule is one module exposing a subclass of :class:`Rule`; ``run``
 yields :class:`Finding`s against a parsed :class:`Project`.  Codes are
-stable and namespaced per rule family (LO/GB/BL/KL/RT).
+stable and namespaced per rule family (LO/GB/BL/KL/RT/CH).
 """
 from __future__ import annotations
 
@@ -24,12 +24,13 @@ class Rule:
 
 def _registry() -> List[Rule]:
     from repro.analysis.rules.blocking_locked import BlockingWhileLocked
+    from repro.analysis.rules.chaos_coverage import ChaosCoverage
     from repro.analysis.rules.guarded_by import GuardedByInference
     from repro.analysis.rules.kernel_lint import KernelLint
     from repro.analysis.rules.lock_order import LockOrder
     from repro.analysis.rules.round_trip import RoundTripCompleteness
     return [LockOrder(), GuardedByInference(), BlockingWhileLocked(),
-            KernelLint(), RoundTripCompleteness()]
+            KernelLint(), RoundTripCompleteness(), ChaosCoverage()]
 
 
 ALL_RULES: List[Rule] = _registry()

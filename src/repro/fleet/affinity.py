@@ -3,9 +3,13 @@
 The KV-aware routing signal: a replica that already served a prompt
 prefix holds that prefix's KV pages, so sending the continuation (a
 multi-turn follow-up, a shared system prompt, a few-shot header) to the
-same replica keeps the pages hot.  Today the payload is *locality*
-(warm pages, warm compile caches); when prefix-sharing COW pages land
-(ROADMAP) the same index keys physical page reuse.
+same replica keeps the pages hot.  The payload is both *locality* (warm
+pages, warm compile caches) and **physical page reuse**: the engine-side
+prefix radix (``serving/prefix/``) keys shared copy-on-write KV pages by
+these same chained block fingerprints, so an affinity-routed
+continuation attaches to the resident prefix pages instead of
+re-prefilling them, and the router's least-pages score charges only the
+replica's *marginal* (post-sharing) pages.
 
 Fingerprints are **chained** blake2b digests per ``block`` tokens: the
 fingerprint of blocks ``[0..k]`` hashes the fingerprint state of

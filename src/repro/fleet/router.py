@@ -10,8 +10,12 @@ pool) and routes per request:
    (``affinity.PrefixAffinityIndex``) maps prompt prefixes to the
    replica that already served them;
 3. **least-pages / least-inflight** — on a miss, the replica with the
-   smallest ``(queued + active, kv bytes in use, router inflight)``
-   tuple wins, so equal queue depth tie-breaks to the emptier page pool.
+   smallest ``(queued + active, marginal pages, kv bytes in use, router
+   inflight)`` tuple wins: *marginal* pages are what the replica's
+   prefix-sharing radix says it would actually allocate for this prompt
+   (``engine.estimate_marginal_pages``), so equal queue depth tie-breaks
+   to the replica already holding the prompt's prefix pages — and then
+   to the emptier page pool.
 
 Requests queued on an overloaded replica (queue depth above the fleet
 median by a threshold) are **stolen** onto underloaded responsive
@@ -83,12 +87,12 @@ class FleetRequest:
     on every rebind so completions from stale bindings are ignored."""
 
     __slots__ = ("fid", "prompt", "max_new_tokens", "eos_token",
-                 "latency_slo_ms", "session", "guaranteed", "outer",
+                 "latency_slo_ms", "session", "guaranteed", "qos", "outer",
                  "replica", "inner", "token", "moves", "submitted_at")
 
     def __init__(self, fid: int, prompt, max_new_tokens: int,
                  eos_token: Optional[int], latency_slo_ms: float,
-                 session: str, guaranteed: bool):
+                 session: str, guaranteed: bool, qos: str = ""):
         self.fid = fid
         self.prompt = prompt
         self.max_new_tokens = max_new_tokens
@@ -96,6 +100,8 @@ class FleetRequest:
         self.latency_slo_ms = latency_slo_ms
         self.session = session
         self.guaranteed = guaranteed
+        # engine-level page-preemption rank; defaults from `guaranteed`
+        self.qos = qos or ("guaranteed" if guaranteed else "burstable")
         self.outer: Future = Future()
         self.replica = ""           # current binding's replica key
         self.inner = None           # current engine RequestHandle
@@ -277,10 +283,11 @@ class FleetRouter:
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_token: Optional[int] = None,
                latency_slo_ms: float = 0.0, session: str = "",
-               guaranteed: bool = False) -> FleetHandle:
+               guaranteed: bool = False, qos: str = "") -> FleetHandle:
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
         rec = FleetRequest(next(self._fids), prompt, max_new_tokens,
-                           eos_token, latency_slo_ms, session, guaranteed)
+                           eos_token, latency_slo_ms, session, guaranteed,
+                           qos)
         with self._lock:
             launches = self._drain_mail_locked()
             launches += self._refresh_locked()
@@ -314,7 +321,8 @@ class FleetRouter:
         key, _blocks = self._affinity.lookup(prompt)
         if key is not None and key in self._replicas:
             return self._replicas[key], "affinity"
-        return min(live, key=self._score), "least"
+        return min(live,
+                   key=lambda r: self._score(r, prompt)), "least"
 
     def _note_choice_locked(self, rec: FleetRequest, ref: ReplicaRef,
                             how: str) -> None:
@@ -340,9 +348,20 @@ class FleetRouter:
     def _live(self) -> List[ReplicaRef]:
         return [r for r in self._replicas.values() if r.alive]
 
-    def _score(self, ref: ReplicaRef) -> Tuple:
+    def _score(self, ref: ReplicaRef, prompt=None) -> Tuple:
+        """Load tuple, least wins.  With a prompt, the second component
+        charges *marginal* (post-sharing) pages: a replica whose prefix
+        radix already holds the prompt's prefix would allocate only the
+        suffix, so an affinity-warm replica beats an equally-loaded cold
+        one — the affinity hit buys physical page reuse, not just
+        locality."""
         queued, active, kv_bytes = ref.engine.load()
-        return (queued + active, kv_bytes,
+        marginal = 0
+        if prompt is not None:
+            est = getattr(ref.engine, "estimate_marginal_pages", None)
+            if est is not None:
+                marginal = est(prompt)
+        return (queued + active, marginal, kv_bytes,
                 ref.submitted - ref.completed, ref.key)
 
     def _responsive(self, ref: ReplicaRef) -> bool:
@@ -369,7 +388,7 @@ class FleetRouter:
                 handle = ref.engine.submit(
                     rec.prompt, max_new_tokens=rec.max_new_tokens,
                     eos_token=rec.eos_token,
-                    latency_slo_ms=rec.latency_slo_ms)
+                    latency_slo_ms=rec.latency_slo_ms, qos=rec.qos)
             except Exception as exc:  # noqa: BLE001 — engine refused
                 # lock-free mailbox: deque appends are atomic and the
                 # entries are drained under the lock

@@ -8,6 +8,7 @@ this package for the trace schema and how CI consumes the output.
 from repro.harness.chaos import ChaosAction, ChaosInjector, ChaosRecord
 from repro.harness.engine_replay import (fleet_scorecard, fleet_submit_fn,
                                          fleet_trace, make_engine_item,
+                                         make_forked_engine_item,
                                          run_fleet_replay, session_tokens)
 from repro.harness.replay import (ReplayReport, RequestOutcome,
                                   TraceReplayer, default_make_item,
@@ -16,14 +17,16 @@ from repro.harness.scorecard import (build_scorecard, jain_index,
                                      load_scorecards, write_scorecards)
 from repro.harness.sim import SimExecutor, sim_builder
 from repro.harness.trace import (GENERATORS, Trace, TraceEvent,
-                                 diurnal_chat, iot_burst, longdoc_batch)
+                                 diurnal_chat, forked_chat, iot_burst,
+                                 longdoc_batch)
 
 __all__ = [
     "ChaosAction", "ChaosInjector", "ChaosRecord", "ReplayReport",
     "RequestOutcome", "TraceReplayer", "default_make_item",
     "specs_for_trace", "build_scorecard", "jain_index", "load_scorecards",
     "write_scorecards", "SimExecutor", "sim_builder", "GENERATORS",
-    "Trace", "TraceEvent", "diurnal_chat", "iot_burst", "longdoc_batch",
+    "Trace", "TraceEvent", "diurnal_chat", "forked_chat", "iot_burst",
+    "longdoc_batch", "make_forked_engine_item",
     "fleet_scorecard", "fleet_submit_fn", "fleet_trace",
     "make_engine_item", "run_fleet_replay", "session_tokens",
 ]

@@ -18,6 +18,7 @@ turns grow — exactly the structure prefix-affinity routing exploits.
 from __future__ import annotations
 
 import hashlib
+import re
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -119,6 +120,37 @@ def make_engine_item(ev: TraceEvent, vocab: int = 256,
     return workload, (tokens, meta)
 
 
+_FORK_RE = re.compile(r"^fork(\d+)-")
+
+
+def make_forked_engine_item(ev: TraceEvent, vocab: int = 256,
+                            max_new_tokens: int = 16
+                            ) -> Tuple[Workload, Tuple]:
+    """Trace event → engine item for ``trace.forked_chat`` traces.
+
+    The session id encodes the fork depth (``fork{d}-s{n}``): tokens are
+    the first ``d`` tokens of one shared header stream followed by the
+    session's own stream — so two sessions with fork depths 16 and 32
+    really are byte-identical for 16 tokens and the deeper one for 32,
+    the divergent-prefix structure the radix/COW layer shares on."""
+    m = _FORK_RE.match(ev.session or "")
+    if m is None:
+        return make_engine_item(ev, vocab, max_new_tokens)
+    plen = ev.prompt_len
+    depth = min(int(m.group(1)), max(plen - 1, 1))
+    tokens = np.concatenate([
+        session_tokens("forked-header", depth, vocab),
+        session_tokens(ev.session, plen - depth, vocab)])
+    meta = {"session": ev.session,
+            "guaranteed": ev.qos_class is QoSClass.GUARANTEED,
+            "max_new": _clip_int(ev.output_len, 1, max_new_tokens),
+            "slo_ms": ev.latency_slo_ms}
+    workload = Workload(f"{ev.service}-{ev.eid}", WorkloadKind.GENERIC,
+                        batch=1, seq_len=meta["max_new"],
+                        est_flops=1e10, latency_slo_ms=ev.latency_slo_ms)
+    return workload, (tokens, meta)
+
+
 def fleet_submit_fn(router: FleetRouter, result_timeout_s: float = 30.0):
     """Adapter: replayer item → router submit → DispatchResult-shaped
     result whose ``output`` is the completed engine ``Request`` (it
@@ -186,8 +218,12 @@ def run_fleet_replay(trace: Trace, cfg, *, replicas: int = 2,
         router.warmup()
     chaos = ChaosInjector(system, chaos_actions, speed=speed) \
         if chaos_actions else None
+    # forked-chat traces need fork-aware token synthesis (the shared
+    # header must really be byte-identical up to each session's depth)
+    make_item = make_forked_engine_item \
+        if trace.meta.get("generator") == "forked-chat" else make_engine_item
     replayer = TraceReplayer(
-        system, trace, make_item=make_engine_item, speed=speed,
+        system, trace, make_item=make_item, speed=speed,
         chaos=chaos, submit_fn=fleet_submit_fn(router, result_timeout_s),
         drain_timeout_s=drain_timeout_s)
     report = replayer.run()

@@ -14,13 +14,16 @@ arguments — the same ``seed`` produces a byte-for-byte identical
 and ``tests/test_harness.py``), so a scorecard regression across PRs can
 never be blamed on workload drift.
 
-Three built-in generators cover the paper's workload families:
+Four built-in generators cover the paper's workload families:
 
 * ``diurnal_chat``    — sinusoidal-rate multi-turn chat (sessions share a
                         prefix group; prompts grow with history),
 * ``iot_burst``       — low-rate sensor telemetry with periodic
                         coordinated bursts and rare GUARANTEED alarms,
-* ``longdoc_batch``   — sparse batches of long-prompt document jobs.
+* ``longdoc_batch``   — sparse batches of long-prompt document jobs,
+* ``forked_chat``     — sessions branching off one shared system-prompt
+                        header at configurable fork depths (divergent
+                        prefixes — the prefix-sharing COW workload).
 """
 from __future__ import annotations
 
@@ -334,8 +337,56 @@ def longdoc_batch(seed: int = 0, duration_s: float = 30.0,
     return _finish("longdoc-batch", seed, duration_s, raw, services, knobs)
 
 
+def forked_chat(seed: int = 0, duration_s: float = 10.0, rps: float = 6.0,
+                sessions: int = 8, header_tokens: int = 48,
+                fork_depths: Tuple[int, ...] = (16, 32, 48),
+                turn_tokens: int = 16, max_prompt: int = 192,
+                output_len: int = 6, guaranteed_fraction: float = 0.25,
+                slo_ms: float = 2500.0,
+                service: str = "forked-chat") -> Trace:
+    """Divergent-prefix chat: every session shares one system-prompt +
+    few-shot header and **forks** off it at a session-specific depth —
+    fork points, not just growing turns.
+
+    Session ``s`` copies the common header up to
+    ``fork_depths[s % len(fork_depths)]`` tokens and then diverges into
+    its own history, so a replay sees (a) many requests whose prompts are
+    byte-identical up to a mid-stream fork (the radix/COW sharing case),
+    and (b) per-session multi-turn growth past the fork (the tail-append
+    case).  The session id encodes the fork depth (``fork{d}-s{n}``) so
+    ``engine_replay.make_forked_engine_item`` can synthesize token
+    streams that really do share the header prefix and diverge at ``d``.
+    Turn ``t`` of a session has ``prompt_len = depth + (t+1) *
+    turn_tokens`` (clipped to ``max_prompt``) — prefix-stable growth.
+    """
+    rng = np.random.default_rng(seed)
+    services = {service: {"tenant": "chat", "qos": "burstable",
+                          "latency_slo_ms": slo_ms}}
+    turns = [0] * sessions
+    raw = []
+    for off in _thinned_poisson(rng, duration_s, lambda _t: rps, rps):
+        s = int(rng.integers(sessions))
+        depth = int(fork_depths[s % len(fork_depths)])
+        depth = max(1, min(depth, header_tokens))
+        plen = _clip_int(depth + (turns[s] + 1) * turn_tokens,
+                         depth + 1, max_prompt)
+        turns[s] += 1
+        hard = rng.random() < guaranteed_fraction
+        qos = QoSClass.GUARANTEED if hard else QoSClass.BURSTABLE
+        raw.append((off, "chat", qos, service, plen, output_len,
+                    f"fork{depth}-s{s}", slo_ms))
+    knobs = {"rps": rps, "sessions": sessions,
+             "header_tokens": header_tokens,
+             "fork_depths": list(fork_depths),
+             "turn_tokens": turn_tokens, "max_prompt": max_prompt,
+             "output_len": output_len,
+             "guaranteed_fraction": guaranteed_fraction, "slo_ms": slo_ms}
+    return _finish("forked-chat", seed, duration_s, raw, services, knobs)
+
+
 GENERATORS: Dict[str, Callable[..., Trace]] = {
     "diurnal-chat": diurnal_chat,
     "iot-burst": iot_burst,
     "longdoc-batch": longdoc_batch,
+    "forked-chat": forked_chat,
 }

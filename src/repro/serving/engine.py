@@ -75,7 +75,14 @@ from repro.core.telemetry import DispatchSample, DispatchStats, percentile
 from repro.core.workload import Workload, WorkloadKind
 from repro.models.config import ModelConfig
 from repro.models.model import build_model
-from repro.serving.kv_cache import PagedKVCache, SlotKVCache, _tree_bytes
+from repro.serving.kv_cache import (PagedKVCache, SlotKVCache, _tree_bytes,
+                                    autotune_page_size)
+from repro.serving.prefix import PrefixRadixIndex
+
+# page-growth preemption order: a dry pool preempts strictly-lower-rank
+# requests only (BEST_EFFORT first), mirroring the AdmissionController's
+# QoS ladder; preemption requeues — it never drops
+_QOS_RANK = {"best-effort": 0, "burstable": 1, "guaranteed": 2}
 
 
 @dataclasses.dataclass
@@ -85,6 +92,7 @@ class Request:
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
     latency_slo_ms: float = 0.0
+    qos: str = "burstable"             # best-effort | burstable | guaranteed
     submitted_at: float = 0.0
     # filled by the engine
     slot: Optional[int] = None
@@ -100,6 +108,10 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     future: Optional["Future[Request]"] = None
+    # prefix sharing: pinned radix nodes backing this request's shared
+    # pages, and how many prompt tokens prefill skipped via the match
+    shared_nodes: List[Any] = dataclasses.field(default_factory=list)
+    kv_shared_tokens: int = 0
 
 
 def slo_slack(req: Request, now: float) -> float:
@@ -157,10 +169,11 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, max_slots: int = 4,
                  max_seq: int = 256, params: Optional[Any] = None,
                  seed: int = 0, mesh=None,
-                 paged: Optional[bool] = None, page_size: int = 16,
+                 paged: Optional[bool] = None, page_size=16,
                  num_pages: Optional[int] = None,
                  prefill_chunk: int = 64,
-                 prefill_budget: Optional[int] = None,
+                 prefill_budget=None,
+                 prefix_sharing: bool = True,
                  replica_id: str = ""):
         self.cfg = cfg
         self.replica_id = replica_id     # fleet membership tag ("" = solo)
@@ -180,6 +193,10 @@ class ServingEngine:
         self.paged = paged_capable if paged is None \
             else bool(paged) and paged_capable
         if self.paged:
+            if page_size == "auto":
+                # config hook: size pages from the arch's measured KV
+                # bytes-per-token instead of the hardcoded default
+                page_size = autotune_page_size(cfg, dtype=cfg.cdtype)
             # pools live in the compute dtype so the scatter never has to
             # re-materialize them and buffer donation stays in place
             self.kv: Any = PagedKVCache(cfg, max_slots, max_seq,
@@ -188,6 +205,18 @@ class ServingEngine:
                                         dtype=cfg.cdtype)
         else:
             self.kv = SlotKVCache(cfg, max_slots, max_seq)
+
+        # ---- prefix sharing (paged only): radix index + COW accounting --
+        # guarded by the engine lock like every other allocator structure;
+        # the router's lock-free estimate_marginal_pages probe is the one
+        # sanctioned reader outside it (match(touch=False), racy-tolerant)
+        self.prefix: Optional[PrefixRadixIndex] = (
+            PrefixRadixIndex(self.kv.page_size)
+            if self.paged and prefix_sharing else None)
+        self.kv_prefix_hits = 0       # admissions that attached shared pages
+        self.kv_prefix_misses = 0
+        self.preemptions = 0          # page-pressure requeues
+        self.decode_stalls = 0        # decode rows skipped for want of a page
 
         # ---- chunked-prefill plan --------------------------------------
         # chunk sizes reuse the pow2 prefill buckets → a bounded compile
@@ -203,7 +232,11 @@ class ServingEngine:
             or (cfg.family == "hybrid" and cfg.sliding_window == 0
                 and cfg.attn_type == "full"))
         self._chunkable = self.paged or self._chunkable_stateful
-        self.prefill_budget = prefill_budget if prefill_budget is not None \
+        # "auto" starts from the same 2-chunk provisional and is refined
+        # from measured chunk/decode walls during warmup()
+        self._budget_auto = prefill_budget == "auto"
+        self.prefill_budget = prefill_budget \
+            if prefill_budget is not None and not self._budget_auto \
             else 2 * self.chunk_tokens
 
         self.queue: List[Request] = []
@@ -357,9 +390,44 @@ class ServingEngine:
                 self.kv.cache_len = clen
                 self.last_tokens = toks
             jax.block_until_ready(self.last_tokens)
+            if self._budget_auto and self.paged:
+                self._autotune_budget()
             self.warmup_s = time.monotonic() - t0
             self._warm = True
         return self
+
+    def _autotune_budget(self):
+        """Refine ``prefill_budget`` from measured walls (both callables
+        are compiled by now, so these are pure execute timings): allow as
+        many chunk-tokens per tick as keep the prefill phase within ~4
+        decode steps' worth of wall, clamped to [1, 8] chunks — decode
+        latency stays flat without starving prompt streaming."""
+        b = self.chunk_tokens
+        kvp = self._kv_span_pages(next(s for s in self.buckets if s >= b))
+        row = jnp.zeros((1, self.kv.pages_per_slot), jnp.int32)
+        zero1 = jnp.zeros((1,), jnp.int32)
+        chunk_wall = decode_wall = float("inf")
+        for _ in range(2):                       # min-of-2: absorb jitter
+            t = time.monotonic()
+            logits, pools = self._chunk(
+                self.params, self.kv.pools,
+                jnp.zeros((1, b), jnp.int32), row[:, :kvp], zero1, zero1)
+            self.kv.pools = pools
+            jax.block_until_ready(logits)
+            chunk_wall = min(chunk_wall, time.monotonic() - t)
+            t = time.monotonic()
+            toks, pools, clen = self._decode(
+                self.params, self.kv.pools, self.kv.page_table,
+                self.last_tokens, self.kv.cache_len,
+                jnp.zeros((self.max_slots,), bool))
+            self.kv.pools = pools
+            self.kv.cache_len = clen
+            self.last_tokens = toks
+            jax.block_until_ready(toks)
+            decode_wall = min(decode_wall, time.monotonic() - t)
+        chunks = max(1, min(8, round(4 * decode_wall / max(chunk_wall,
+                                                           1e-9))))
+        self.prefill_budget = chunks * self.chunk_tokens
 
     # ------------------------------------------------------- loop lifecycle
     @property
@@ -451,7 +519,8 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_token: Optional[int] = None,
-               latency_slo_ms: float = 0.0) -> RequestHandle:
+               latency_slo_ms: float = 0.0,
+               qos: str = "burstable") -> RequestHandle:
         """Enqueue a request; returns a handle whose ``result()`` blocks.
 
         Invalid prompts are rejected HERE with ``ValueError`` — never
@@ -467,8 +536,11 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {prompt.size} exceeds max_seq "
                 f"{self.max_seq}")
+        if qos not in _QOS_RANK:
+            raise ValueError(f"unknown qos {qos!r}; "
+                             f"expected one of {sorted(_QOS_RANK)}")
         req = Request(next(self._rid), prompt,
-                      max_new_tokens, eos_token, latency_slo_ms,
+                      max_new_tokens, eos_token, latency_slo_ms, qos,
                       submitted_at=time.monotonic(), future=Future())
         with self._lock:
             self.queue.append(req)
@@ -521,6 +593,33 @@ class ServingEngine:
         finally:
             self._lock.release()
 
+    def estimate_marginal_pages(self, prompt) -> int:  # analysis: unguarded-ok — racy routing estimate by contract
+        """Racy post-sharing page estimate for a prospective prompt — the
+        router's least-pages score charges only the pages this replica
+        would actually allocate (a warm radix makes the replica cheap).
+        Lock-free by contract: ``match(touch=False)`` mutates nothing and
+        any torn read just degrades one routing decision."""
+        try:
+            p = np.asarray(prompt, np.int32).reshape(-1)
+            need = self.kv.pages_needed(min(p.size + 1, self.max_seq))
+            if self.prefix is None or p.size == 0:
+                return need
+            m = self.prefix.match(p, touch=False)
+            w = min(m.matched_tokens, p.size - 1)
+            return max(need - w // self.kv.page_size, 1)
+        except Exception:  # noqa: BLE001 — a torn racy walk is a miss
+            return self.kv.pages_needed(
+                min(np.asarray(prompt).size + 1, self.max_seq))
+
+    def release_prefix_cache(self) -> int:
+        """Drop every unpinned radix node, returning its pages to the
+        pool (idle-time cache release / tests).  Pages still referenced
+        by in-flight requests stay allocated until those finish."""
+        with self._lock:
+            if self.prefix is None:
+                return 0
+            return self.prefix.clear(self.kv)
+
     def note_prefix(self, hit: bool) -> None:
         """Router-reported prefix-affinity outcome for this replica."""
         if hit:
@@ -550,12 +649,48 @@ class ServingEngine:
         self._tick.notify_all()
 
     def _release(self, req: Request):
-        """Return the request's slot (and pages) to the cache manager."""
+        """Return the request's slot (and pages) to the cache manager.
+        Shared pages only drop this request's reference; the radix nodes
+        backing them are unpinned (eviction may now consider them)."""
         if req.slot is not None:
             self.kv.free(req.slot)
             req.slot = None
+        if req.shared_nodes:
+            if self.prefix is not None:
+                self.prefix.unpin(req.shared_nodes)
+            req.shared_nodes = []
         req.staging = None
         req.table_row = None
+
+    # ---------------------------------------------------- prefix matching
+    def _match_prefix(self, prompt: np.ndarray):
+        """Longest shared prefix for an incoming prompt.
+
+        Returns ``(pins, shared_pages, cow_src, w)``: ``w`` prompt tokens
+        are already resident (capped at ``plen - 1`` so prefill always
+        runs ≥ 1 real token and produces the first-token logits), the
+        ``w // page_size`` whole pages attach by reference, and a mid-page
+        boundary (``w`` not page-aligned) names the page to copy-seed the
+        first private page from (divergence → copy-then-append).  ``pins``
+        are the radix nodes the request depends on — pinned before any
+        eviction can run."""
+        plen = len(prompt)
+        m = self.prefix.match(prompt)
+        w = min(m.matched_tokens, plen - 1)
+        ps = self.kv.page_size
+        boundary = w // ps
+        chain = m.nodes[:boundary]
+        shared = [n.page for n in chain]
+        pins = list(chain)
+        cow_src = None
+        if w > boundary * ps:                    # divergence mid-page
+            if boundary < len(m.nodes):
+                cow_node = m.nodes[boundary]
+            else:
+                cow_node = m.tail               # tail covered tokens ⇒ set
+            cow_src = cow_node.page
+            pins.append(cow_node)
+        return pins, shared, cow_src, w
 
     # ---------------------------------------------------------- admission
     def _admit(self):
@@ -580,14 +715,42 @@ class ServingEngine:
                     f"prompt length {plen} outside (0, {self.max_seq}]"))
                 continue
             if self.paged:
-                # reserve pages for the prompt AND the planned generation
-                # up front: no mid-decode page faults, and pages-in-use is
-                # the engine's true HBM commitment
-                got = self.kv.alloc(min(plen + req.max_new_tokens,
-                                        self.max_seq))
+                # marginal admission: reserve the prompt + ONE decode
+                # token (further decode pages grow on demand), attach any
+                # radix-matched prefix by reference, and copy-seed the
+                # divergence page — pages-in-use stays the engine's true
+                # (post-sharing) HBM commitment
+                if not self.kv.free_slots:
+                    break
+                pins, shared, cow_src, w = [], [], None, 0
+                if self.prefix is not None:
+                    pins, shared, cow_src, w = self._match_prefix(
+                        req.prompt)
+                    self.prefix.pin(pins)
+                n_alloc = min(plen + 1, self.max_seq)
+                got = self.kv.alloc(n_alloc, shared_pages=shared,
+                                    cow_src=cow_src)
+                if got is None and self.prefix is not None:
+                    # pool dry: evict LRU unpinned radix leaves (the
+                    # request's own nodes are pinned above) and retry once
+                    deficit = (self.kv.pages_needed(n_alloc) - len(shared)
+                               - len(self.kv.free_pages))
+                    if deficit > 0 and \
+                            self.prefix.evict(self.kv, deficit) >= deficit:
+                        got = self.kv.alloc(n_alloc, shared_pages=shared,
+                                            cow_src=cow_src)
                 if got is None:
+                    if self.prefix is not None:
+                        self.prefix.unpin(pins)
                     break
                 req.slot, req.table_row = got
+                req.shared_nodes = pins
+                req.kv_shared_tokens = w
+                if self.prefix is not None:
+                    if w:
+                        self.kv_prefix_hits += 1
+                    else:
+                        self.kv_prefix_misses += 1
             else:
                 if not self.kv.free_slots:
                     break
@@ -596,7 +759,9 @@ class ServingEngine:
                     req.staging = self.model.init_caches(1, self.max_seq)
             self.queue.pop(0)
             req.phase = "prefill"
-            req.pos = 0
+            # prefill resumes AFTER the shared prefix: matched tokens are
+            # already resident, only the suffix streams through chunks
+            req.pos = req.kv_shared_tokens
             req.admitted_at = time.monotonic()
             self.recent_queue_s.append(req.admitted_at - req.submitted_at)
             self.active[req.rid] = req
@@ -734,11 +899,99 @@ class ServingEngine:
                     pref.remove(req)
         return total
 
+    # ----------------------------------------------- on-demand page growth
+    def _requeue(self, victim: Request):
+        """Preempt via the existing requeue path: release the victim's
+        capacity and re-run it from scratch at the queue head.  Its future
+        stays pending (never a drop) and greedy decode is deterministic,
+        so the re-run reproduces the same tokens."""
+        self.preemptions += 1
+        self._release(victim)
+        self.active.pop(victim.rid, None)
+        victim.phase = "queued"
+        victim.pos = 0
+        victim.chunks = 0
+        victim.generated = []
+        victim.first_token_at = None
+        victim.admitted_at = None
+        victim.kv_shared_tokens = 0
+        self.queue.insert(0, victim)
+
+    def _preempt_for(self, req: Request) -> Optional[Request]:
+        """Requeue one strictly-lower-QoS active request to reclaim its
+        pages (BEST_EFFORT goes first, youngest-admitted within a rank).
+        Returns the victim, or ``None`` when nothing outranks."""
+        rank = _QOS_RANK.get(req.qos, 1)
+        victims = [r for r in self.active.values()
+                   if r.rid != req.rid and _QOS_RANK.get(r.qos, 1) < rank]
+        if not victims:
+            return None
+        victim = min(victims, key=lambda r: (_QOS_RANK.get(r.qos, 1),
+                                             -(r.admitted_at or 0.0)))
+        self._requeue(victim)
+        return victim
+
+    def _grow_decode_pages(self, dec: List[Request]) -> set:
+        """Grow each decoding row that is about to write past its last
+        page (one page at a time — marginal footprint).  A dry pool
+        reclaims in order: LRU radix eviction, then BEST_EFFORT-style
+        preemption of a strictly-lower-QoS request; a row that still can't
+        get a page is *stalled* for this tick (masked inactive — its
+        unallocated logical page maps to table entry 0, the trash page, so
+        even a stray write is harmless).  Returns the stalled rids."""
+        stalled = set()
+        order = sorted(dec, key=lambda r: (-_QOS_RANK.get(r.qos, 1),
+                                           r.admitted_at or 0.0))
+        for req in order:                        # guaranteed rows first
+            if req.rid not in self.active:       # preempted below us
+                continue
+            # decode writes KV at cache_len = plen + generated - 1 (the
+            # final sampled token's KV is never written) — host-derivable,
+            # no device sync
+            pos = len(req.prompt) + len(req.generated) - 1
+            if pos >= self.max_seq:
+                continue
+            if pos // self.kv.page_size < len(self.kv.slot_pages[req.slot]):
+                continue
+            if self.kv.append_page(req.slot) is not None:
+                continue
+            if self.prefix is not None and self.prefix.evict(self.kv, 1):
+                if self.kv.append_page(req.slot) is not None:
+                    continue
+            if self._preempt_for(req) is not None and \
+                    self.kv.append_page(req.slot) is not None:
+                continue
+            stalled.add(req.rid)
+            self.decode_stalls += 1
+        # deadlock valve: every decode row stalled and no prefill under
+        # way means nothing will free a page on its own — requeue the
+        # lowest-QoS youngest stalled row so the rest make progress
+        still = [r for r in dec if r.rid in self.active
+                 and r.phase == "decode"]
+        if stalled and len(stalled) == len(still) and \
+                not any(r.phase == "prefill"
+                        for r in self.active.values()):
+            victim = min(still, key=lambda r: (_QOS_RANK.get(r.qos, 1),
+                                               -(r.admitted_at or 0.0)))
+            self._requeue(victim)
+            stalled.discard(victim.rid)
+            for req in still:
+                if req.rid in stalled and \
+                        self.kv.append_page(req.slot) is not None:
+                    stalled.discard(req.rid)
+        return stalled
+
     # ------------------------------------------------------- decode phase
     def _decode_tick(self) -> int:
         dec = [r for r in self.active.values() if r.phase == "decode"]
         if not dec:
             return 0
+        if self.paged:
+            stalled = self._grow_decode_pages(dec)
+            dec = [r for r in dec if r.rid in self.active
+                   and r.phase == "decode" and r.rid not in stalled]
+            if not dec:
+                return 0
         active_mask = np.zeros((self.max_slots,), bool)
         for req in dec:
             active_mask[req.slot] = True
@@ -811,6 +1064,20 @@ class ServingEngine:
     def _finish(self, req: Request, now: float):
         req.done = True
         req.finished_at = now
+        if self.prefix is not None and req.slot is not None:
+            # donate the request's written pages to the radix index BEFORE
+            # release: nodes take their own page references, so the pages
+            # survive this request's free and the next same-prefix request
+            # attaches instead of re-prefilling.  Valid coverage is
+            # prompt + generated[:-1] (the final token's KV is never
+            # written).
+            cached = min(len(req.prompt) + max(len(req.generated) - 1, 0),
+                         self.max_seq)
+            tokens = np.concatenate(
+                [req.prompt,
+                 np.asarray(req.generated[:-1], np.int32)])[:cached]
+            self.prefix.insert(tokens, self.kv.slot_pages[req.slot],
+                               self.kv)
         self._release(req)
         del self.active[req.rid]
         self.completed[req.rid] = req
@@ -860,6 +1127,16 @@ class ServingEngine:
             if self.paged:
                 out["pages_in_use"] = self.kv.pages_in_use()
                 out["page_utilization"] = self.kv.page_utilization()
+                out["cow_copies"] = self.kv.cow_copies
+                out["kv_prefix_hits"] = self.kv_prefix_hits
+                out["kv_prefix_misses"] = self.kv_prefix_misses
+                out["preemptions"] = self.preemptions
+                out["decode_stalls"] = self.decode_stalls
+                out["kv_shared_pages_attached"] = sum(
+                    self.kv.slot_shared.values())
+                if self.prefix is not None:
+                    for k, v in self.prefix.stats().items():
+                        out[f"radix_{k}"] = v
             recent = list(self.recent_queue_s)
             ticks = list(self._tick_log)
         if recent:

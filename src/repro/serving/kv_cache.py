@@ -12,6 +12,19 @@ equivalent to shrink the static pool itself.  Physical page 0 is the
 trash page: masked writes (bucket padding, unowned decode rows) are
 redirected there, so it is never handed to a request.
 
+Pages are **refcounted** so the prefix-sharing layer
+(``serving/prefix/``) can attach one physical page to many requests:
+``alloc`` accepts matched prefix pages by reference (refcount bump, no
+copy), a mid-page divergence is resolved *eagerly* at admission by
+copying the boundary page into a private one (``cow_src``), and ``free``
+decrements instead of unconditionally returning pages — a page rejoins
+the free list only when its last holder (request or radix node) lets go.
+Shared pages are never written: the engine prefills from the divergence
+point into private pages and decode appends land past the prompt, so the
+trash-page story for masked writes is unchanged.  ``bytes_in_use`` counts
+each physical page once, which makes admission and
+``dynamic_footprint_bytes`` automatically *marginal* (post-sharing).
+
 ``SlotKVCache`` keeps the original dense design for the stateful families
 (SSM state / SWA ring buffers / MLA latent caches), where the per-layer
 cache is already recurrent-state- or window-bounded and paging the
@@ -33,6 +46,27 @@ from repro.models import transformer
 
 def _tree_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype=jnp.bfloat16) -> int:
+    """Exact per-token KV footprint for an arch: probe a 1-page,
+    1-token-per-page paged tree (cheap — a few KiB) and sum its leaves."""
+    return _tree_bytes(transformer.init_paged_cache_tree(cfg, 1, 1, dtype))
+
+
+def autotune_page_size(cfg: ModelConfig, dtype=jnp.bfloat16,
+                       target_page_bytes: int = 256 * 1024) -> int:
+    """Pick ``page_size`` from the arch's KV bytes-per-token: the
+    power-of-two in [8, 128] whose page lands nearest
+    ``target_page_bytes``.  Wide-KV archs get small pages (fine-grained
+    sharing/eviction without blowing up the page-table transfer); skinny
+    archs get big pages (fewer table entries per sequence, less
+    fragmentation).  Pure host math — no device allocation beyond the
+    one-token probe."""
+    bpt = max(kv_bytes_per_token(cfg, dtype), 1)
+    best = min((8 << i for i in range(5)),        # 8, 16, 32, 64, 128
+               key=lambda ps: abs(ps * bpt - target_page_bytes))
+    return best
 
 
 class SlotKVCache:
@@ -136,6 +170,15 @@ class PagedKVCache:
         self.free_slots: List[int] = list(range(max_slots))
         self.free_pages: List[int] = list(range(1, num_pages))  # 0 = trash
         self.slot_pages: Dict[int, List[int]] = {}
+        # refcount per allocated page: private pages sit at 1; a shared
+        # prefix page carries one ref per attached request plus one per
+        # radix node.  Invariant: pages_in_use() == len(page_refs).
+        self.page_refs: Dict[int, int] = {}
+        # slot -> count of leading pages attached by reference (telemetry;
+        # those pages may still be referenced by others after free)
+        self.slot_shared: Dict[int, int] = {}
+        self.cow_copies = 0
+        self._copy_page_fn = None
         self._capacity_bytes = _tree_bytes(self.pools)
         self._page_bytes = self._capacity_bytes // num_pages
 
@@ -167,22 +210,93 @@ class PagedKVCache:
         """What the dense ``max_slots × max_seq`` cache would allocate."""
         return self.max_slots * self.pages_per_slot * self._page_bytes
 
+    # --------------------------------------------------------- refcounting
+    def _take_page(self) -> int:
+        """Pop a free page and start its refcount at 1."""
+        pid = self.free_pages.pop(0)
+        assert pid not in self.page_refs
+        self.page_refs[pid] = 1
+        return pid
+
+    def ref_page(self, pid: int) -> int:
+        """Add a reference to an already-allocated page."""
+        assert pid in self.page_refs, f"ref on unallocated page {pid}"
+        self.page_refs[pid] += 1
+        return self.page_refs[pid]
+
+    def unref_page(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page actually went
+        back to the free list (last holder let go)."""
+        refs = self.page_refs.get(pid)
+        assert refs is not None and refs > 0, f"unref of free page {pid}"
+        if refs == 1:
+            del self.page_refs[pid]
+            self.free_pages.append(pid)
+            return True
+        self.page_refs[pid] = refs - 1
+        return False
+
     # ---------------------------------------------------------- allocation
-    def alloc(self, n_tokens: int):
+    def alloc(self, n_tokens: int, shared_pages=(), cow_src=None):
         """Reserve a slot + pages for ``n_tokens`` (prompt + planned new
-        tokens).  Returns ``(slot, table_row)`` — the row is a standalone
-        [1, MP] device array the prefill chunks write through — or ``None``
-        when slots or pages are exhausted (caller keeps the request
-        queued)."""
+        tokens).  ``shared_pages`` attach an already-resident prefix by
+        reference (refcount bump — the leading logical pages alias those
+        physical pages and are **never written** by this request); if
+        ``cow_src`` is given the first private page is copy-seeded from it
+        (mid-page divergence: copy the shared boundary page, then the
+        prefill overwrites from the divergence point).  Returns ``(slot,
+        table_row)`` — the row is a standalone [1, MP] device array the
+        prefill chunks write through — or ``None`` when slots or private
+        pages are exhausted (caller keeps the request queued; nothing is
+        reserved on failure)."""
         need = self.pages_needed(n_tokens)
-        if not self.free_slots or len(self.free_pages) < need:
+        shared = list(shared_pages)
+        assert len(shared) < need or (len(shared) == need and need == 0), \
+            "shared prefix must leave at least one private page"
+        priv_need = need - len(shared)
+        if not self.free_slots or len(self.free_pages) < priv_need:
             return None
         slot = self.free_slots.pop(0)
-        pages = [self.free_pages.pop(0) for _ in range(need)]
+        for pid in shared:
+            self.ref_page(pid)
+        priv = [self._take_page() for _ in range(priv_need)]
+        if cow_src is not None and priv:
+            self.copy_page(cow_src, priv[0])
+            self.cow_copies += 1
+        pages = shared + priv
         self.slot_pages[slot] = pages
+        self.slot_shared[slot] = len(shared)
         row = np.zeros((1, self.pages_per_slot), np.int32)
         row[0, :need] = pages
         return slot, jnp.asarray(row)
+
+    def copy_page(self, src: int, dst: int):
+        """Device-side copy of one physical page across every layer pool
+        (page axis 1 of each ``[L, num_pages, page_size, H, D]`` leaf).
+        Indices stay traced so one compilation covers all (src, dst)."""
+        if self._copy_page_fn is None:
+            def _copy(pools, s, d):
+                return jax.tree.map(
+                    lambda a: a.at[:, d].set(a[:, s]), pools)
+            self._copy_page_fn = jax.jit(_copy, donate_argnums=(0,))
+        self.pools = self._copy_page_fn(
+            self.pools, jnp.int32(src), jnp.int32(dst))
+
+    def append_page(self, slot: int) -> Optional[int]:
+        """Grow an installed slot by one private page (on-demand decode
+        growth).  Publishes the new physical page directly into the shared
+        device table — safe mid-flight because the row's valid length
+        still points below the new page.  Returns the page id, or ``None``
+        when the pool is dry or the slot is at ``max_seq`` width."""
+        pages = self.slot_pages.get(slot)
+        assert pages is not None, f"append_page on unallocated slot {slot}"
+        if len(pages) >= self.pages_per_slot or not self.free_pages:
+            return None
+        pid = self._take_page()
+        idx = len(pages)
+        pages.append(pid)
+        self.page_table = self.page_table.at[slot, idx].set(pid)
+        return pid
 
     def install(self, slot: int, table_row, length: int):
         """Publish a finished prefill: the slot's row becomes visible to
@@ -191,10 +305,14 @@ class PagedKVCache:
         self.cache_len = self.cache_len.at[slot].set(length)
 
     def free(self, slot: int):
-        """Return the slot's pages and zero its table row, so any stale
-        masked decode write for this row lands on the trash page."""
+        """Drop the slot's references and zero its table row, so any stale
+        masked decode write for this row lands on the trash page.  Pages
+        still referenced elsewhere (radix nodes, sibling requests) stay
+        allocated; exclusively-held pages rejoin the free list."""
         assert 0 <= slot < self.max_slots
-        self.free_pages.extend(self.slot_pages.pop(slot, []))
+        for pid in self.slot_pages.pop(slot, []):
+            self.unref_page(pid)
+        self.slot_shared.pop(slot, None)
         self.page_table = self.page_table.at[slot].set(0)
         self.cache_len = self.cache_len.at[slot].set(0)
         self.free_slots.append(slot)

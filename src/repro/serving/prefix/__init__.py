@@ -1,0 +1,9 @@
+"""Prefix-sharing layer over ``PagedKVCache``: radix index + COW pages.
+
+See ``radix.py`` for the index and ``README.md`` for the refcount /
+copy-on-write / eviction state machine and the lock-order contract.
+"""
+from repro.serving.prefix.radix import (MatchResult, PrefixNode,
+                                        PrefixRadixIndex)
+
+__all__ = ["MatchResult", "PrefixNode", "PrefixRadixIndex"]

@@ -208,6 +208,27 @@ FIXTURES = {
                 with self._lock:
                     self.router.on_done()
     """,
+    "harnesspkg/chaos.py": """
+        KINDS = ("flaky-link", "node-freeze",
+                 "clock-skew",  # analysis: chaos-untested-ok
+                 )
+
+
+        class MiniChaos:
+            def inject(self, kind):
+                if kind not in KINDS:
+                    raise ValueError(kind)
+    """,
+    "test_recovery.py": """
+        def test_flaky_link_recovers():
+            kind = "flaky-link"
+            assert kind in ("flaky-link",)
+
+
+        def test_node_freeze_injected_but_unchecked():
+            kind = "node-freeze"      # injected, nothing asserted after
+            print(kind)
+    """,
     "clean.py": """
         import threading
 
@@ -293,6 +314,14 @@ def test_round_trip_fires_and_derived_pragma_suppresses(finding_ids):
     assert "RT002:roundtrip.py:Thing.extra" in finding_ids
     assert not any("Thing.cached" in i for i in finding_ids)
     assert not any("Thing.a" in i or "Thing.b" in i for i in finding_ids)
+
+
+def test_chaos_coverage_fires_and_pragma_suppresses(finding_ids):
+    # "node-freeze" appears only in a test with no assert → uncovered;
+    # "flaky-link" has an asserting test; "clock-skew" is pragma'd off
+    assert "CH001:harnesspkg/chaos.py:node-freeze" in finding_ids
+    assert "CH001:harnesspkg/chaos.py:flaky-link" not in finding_ids
+    assert "CH001:harnesspkg/chaos.py:clock-skew" not in finding_ids
 
 
 def test_fleet_cycle_and_cross_package_edges(finding_ids):

@@ -82,9 +82,10 @@ class StubEngine:
         self._rids = itertools.count()
 
     def submit(self, prompt, max_new_tokens=16, eos_token=None,
-               latency_slo_ms=0.0):
+               latency_slo_ms=0.0, qos="burstable"):
         if self.fail_submit:
             raise RuntimeError("engine refused")
+        self.last_qos = qos
         rid = next(self._rids)
         fut = Future()
         self.queued[rid] = fut

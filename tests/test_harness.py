@@ -180,6 +180,38 @@ def test_chaos_quota_churn_records():
         [r.details for r in report.chaos]
 
 
+def test_chaos_engine_stall_recovery():
+    # one service wedges mid-trace ("engine-stall"); after the stall
+    # window the service must serve again — arrivals scheduled past the
+    # stall still complete, nothing is silently dropped
+    trace = iot_burst(seed=6, duration_s=4.0, burst_period_s=1.5,
+                      burst_size=6, alarm_rps=1.0)
+    system = _tiny_system(trace)
+    chaos = ChaosInjector(system, [
+        ChaosAction(at_s=1.0, kind="engine-stall", target="telemetry",
+                    duration_s=0.5),
+    ], speed=4.0)
+    report = TraceReplayer(system, trace, speed=4.0, chaos=chaos).run()
+    chaos.join()
+
+    assert [r.kind for r in report.chaos] == ["engine-stall"]
+    rec = report.chaos[0]
+    assert not rec.details.get("error"), rec.details
+    assert rec.details["stalled"] > 0           # the fault really landed
+    # recovery: telemetry arrivals scheduled after the stall window ended
+    # (at_s + duration_s) were served by the unstalled service
+    ev_by_id = {e.eid: e for e in trace.events}
+    post = [o for o in report.outcomes
+            if o.service == "telemetry"
+            and ev_by_id[o.eid].offset_s > 1.5]
+    assert post, "trace must extend past the stall window"
+    assert all(o.ok for o in post), \
+        [o for o in post if not o.ok]
+    # and the fleet-wide zero-drop invariant survived the stall
+    card = build_scorecard(report)
+    assert card["guaranteed"]["dropped"] == 0
+
+
 def test_chaos_rejects_unknown_kind():
     with pytest.raises(ValueError):
         ChaosAction(at_s=0.0, kind="meteor-strike", target="edge0")

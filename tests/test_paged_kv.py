@@ -208,8 +208,13 @@ def test_pages_freed_after_drain_and_memory_below_dense(exact_config):
     assert 0 < eng.kv.bytes_in_use() < eng.kv.dense_equivalent_bytes() // 2
     eng.run_until_drained()
     assert all(h.done() for h in handles)
-    assert eng.kv.pages_in_use() == 0
+    # after drain the only pages still held belong to the prefix radix
+    # index (finished requests donate their prefixes for reuse); every
+    # slot is back and an explicit cache release empties the pool
+    assert eng.kv.pages_in_use() == eng.prefix.pages
     assert len(eng.kv.free_slots) == 4
+    eng.release_prefix_cache()
+    assert eng.kv.pages_in_use() == 0 and not eng.kv.page_refs
 
 
 def test_warmup_is_state_neutral_and_idempotent(exact_config):
@@ -308,6 +313,12 @@ def test_engine_executor_paged_footprint(exact_config):
     eng.step()
     assert ex.dynamic_footprint_bytes() > ex._params_bytes
     eng.run_until_drained()
+    # the finished request donated its prefix to the radix, which keeps
+    # those pages resident — the dynamic footprint charges them
+    radix_bytes = eng.prefix.pages * eng.kv._page_bytes
+    assert radix_bytes > 0
+    assert ex.dynamic_footprint_bytes() == ex._params_bytes + radix_bytes
+    eng.release_prefix_cache()
     assert ex.dynamic_footprint_bytes() == ex._params_bytes
     # an undersized pool really shrinks the static reservation
     small = ServingEngine(cfg, max_slots=4, max_seq=128,

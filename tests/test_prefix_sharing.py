@@ -1,0 +1,421 @@
+"""Prefix-sharing copy-on-write invariants: radix index semantics on a
+fake page pool, refcount safety, COW divergence token-exactness against
+the dense oracle (plus byte-level immutability of shared pages),
+pinned-node eviction safety, a seeded randomized alloc/fork/free/evict
+stress on the real allocator, marginal admission + on-demand growth +
+QoS preemption under a tight pool, autotuned page geometry, and the
+forked-chat fleet replay zero-GUARANTEED-drop gate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import (PagedKVCache, autotune_page_size,
+                                    kv_bytes_per_token)
+from repro.serving.prefix import PrefixRadixIndex
+
+
+def _oracle(model, params, prompt, n, max_seq):
+    caches = model.init_caches(1, max_seq, dtype=jnp.float32)
+    lg, caches, clen = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, caches)
+    out = [int(jnp.argmax(lg[0]))]
+    for _ in range(n - 1):
+        lg, caches = model.decode(params,
+                                  jnp.asarray([out[-1]], jnp.int32),
+                                  caches, clen)
+        clen = clen + 1
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# radix index semantics against a fake page pool (no device state)
+# ---------------------------------------------------------------------------
+
+class FakeCache:
+    """Host-only stand-in honoring the refcount protocol the radix uses."""
+
+    def __init__(self, num_pages: int = 64):
+        self.free_pages = list(range(1, num_pages))
+        self.page_refs = {}
+
+    def take(self) -> int:
+        pid = self.free_pages.pop(0)
+        self.page_refs[pid] = 1
+        return pid
+
+    def ref_page(self, pid: int) -> int:
+        assert pid in self.page_refs, f"ref on unallocated page {pid}"
+        self.page_refs[pid] += 1
+        return self.page_refs[pid]
+
+    def unref_page(self, pid: int) -> bool:
+        refs = self.page_refs.get(pid)
+        assert refs is not None and refs > 0, f"unref of free page {pid}"
+        if refs == 1:
+            del self.page_refs[pid]
+            self.free_pages.append(pid)
+            return True
+        self.page_refs[pid] = refs - 1
+        return False
+
+
+def _donate(idx, cache, tokens):
+    """Simulate a finished request: take pages, insert, drop own refs."""
+    n_pages = -(-len(tokens) // idx.page_size)
+    pages = [cache.take() for _ in range(n_pages)]
+    idx.insert(tokens, pages, cache)
+    for p in pages:
+        cache.unref_page(p)
+    return pages
+
+
+def test_radix_longest_prefix_match_and_tail():
+    idx, cache = PrefixRadixIndex(4), FakeCache()
+    a = np.arange(11, dtype=np.int32)          # 2 complete blocks + 3 tail
+    _donate(idx, cache, a)
+    assert idx.pages == 3                      # 2 complete nodes + 1 tail
+    # after the donor freed its refs, every page is held only by its node
+    assert all(r == 1 for r in cache.page_refs.values())
+
+    m = idx.match(a)
+    assert m.matched_tokens == 11 and len(m.nodes) == 2
+    assert m.tail is not None and m.tail.valid == 3
+    # exact block boundary: complete chain only, no tail
+    m8 = idx.match(a[:8])
+    assert m8.matched_tokens == 8 and m8.tail is None
+    # divergence inside block 1 → chained fingerprints stop at block 0
+    b = a.copy()
+    b[5] = 99
+    assert idx.match(b).matched_tokens == 4
+    # divergence inside the tail → token-wise common prefix counts
+    c = np.concatenate([a[:9], [77, 78]]).astype(np.int32)
+    mc = idx.match(c)
+    assert mc.matched_tokens == 9 and mc.tail is not None
+    # total miss
+    assert idx.match(np.full(8, 55, np.int32)).matched_tokens == 0
+    assert idx.misses >= 1 and idx.hits >= 3
+
+
+def test_radix_insert_dedups_and_second_donor_pages_free():
+    idx, cache = PrefixRadixIndex(4), FakeCache()
+    a = np.arange(11, dtype=np.int32)
+    first = _donate(idx, cache, a)
+    held = dict(cache.page_refs)
+    # a second request with the identical stream donates different
+    # physical pages; the radix keeps its originals (same chained
+    # fingerprint ⇒ identical KV bytes) and the duplicates go free
+    second = _donate(idx, cache, a)
+    assert idx.pages == 3
+    assert cache.page_refs == held
+    assert all(p in cache.free_pages for p in second)
+    assert all(p in cache.page_refs for p in first)
+
+
+def test_radix_eviction_is_lru_and_never_touches_pins():
+    idx, cache = PrefixRadixIndex(4), FakeCache()
+    a = np.arange(16, dtype=np.int32)
+    b = np.concatenate([a[:4], 100 + np.arange(8)]).astype(np.int32)
+    _donate(idx, cache, a)                     # 4 complete nodes
+    _donate(idx, cache, b)                     # shares block 0, +2 nodes
+    assert idx.pages == 6
+    m = idx.match(a)                           # touches a's chain (newer)
+    idx.pin(m.nodes)
+    # evict everything evictable: only b's unpinned branch can go — a's
+    # chain is pinned, and pinned interior nodes shield nothing extra
+    # (b's branch hangs off a pinned root child but is itself unpinned)
+    freed = idx.evict(cache, need_pages=10)
+    assert freed == 2                          # b's two private nodes
+    assert idx.pages == 4
+    assert all(n in idx._nodes for n in m.nodes)
+    idx.unpin(m.nodes)
+    assert idx.evict(cache, need_pages=10) == 4
+    assert idx.pages == 0 and not cache.page_refs
+    # every page came back exactly once
+    assert sorted(cache.free_pages) == list(range(1, 64))
+
+
+def test_radix_pin_underflow_and_unref_underflow_assert():
+    idx, cache = PrefixRadixIndex(4), FakeCache()
+    _donate(idx, cache, np.arange(8, dtype=np.int32))
+    (node,) = [n for n in idx._nodes if n.is_leaf()]
+    with pytest.raises(AssertionError):
+        idx.unpin([node])                      # unpin without pin
+    pid = cache.take()
+    cache.unref_page(pid)
+    with pytest.raises(AssertionError):
+        cache.unref_page(pid)                  # refcount never negative
+
+
+def test_radix_tail_cap_evicts_lru_tail():
+    idx, cache = PrefixRadixIndex(4, max_tails=2), FakeCache()
+    base = np.arange(4, dtype=np.int32)
+    for i in range(4):                         # 4 distinct tails, cap 2
+        tail = np.array([50 + i, 60 + i], np.int32)
+        _donate(idx, cache, np.concatenate([base, tail]))
+    root_child = idx.root.children[next(iter(idx.root.children))]
+    assert len(root_child.tails) == 2
+    # pages of the evicted tails returned to the pool
+    assert idx.pages == 1 + 2
+
+
+# ---------------------------------------------------------------------------
+# engine-level sharing + COW vs the dense oracle
+# ---------------------------------------------------------------------------
+
+def test_shared_cow_and_divergence_match_oracle(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=2, max_seq=64, page_size=8)
+    rng = np.random.default_rng(0)
+    seed = rng.integers(0, cfg.vocab_size, size=40)
+    h1 = eng.submit(seed, max_new_tokens=4)
+    eng.run_until_drained()
+    first = h1.result()
+    assert first.generated == _oracle(eng.model, eng.params, seed, 4, 64)
+    assert eng.prefix.pages > 0                # finish donated the prefix
+
+    # snapshot the resident chain's physical bytes: COW must never write
+    # a shared page, whatever the forks below do
+    chain = eng.prefix.match(seed, touch=False)
+    shared_pids = [n.page for n in chain.nodes]
+    snap = [[np.asarray(leaf[:, p]).copy()
+             for leaf in jax.tree.leaves(eng.kv.pools)]
+            for p in shared_pids]
+
+    # (a) identical prompt: 4 whole pages attach by reference, the w =
+    # plen-1 cap lands mid-page → boundary page copy-seeded (COW)
+    h2 = eng.submit(seed, max_new_tokens=4)
+    eng.run_until_drained()
+    again = h2.result()
+    assert again.kv_shared_tokens == 39
+    assert eng.kv.cow_copies >= 1
+    assert again.generated == first.generated
+
+    # (b) pure extension: prefix fully resident, page-aligned, no COW
+    cows = eng.kv.cow_copies
+    ext = np.concatenate([seed, rng.integers(0, cfg.vocab_size, size=8)])
+    h3 = eng.submit(ext, max_new_tokens=4)
+    eng.run_until_drained()
+    r_ext = h3.result()
+    assert r_ext.kv_shared_tokens == 40 and eng.kv.cow_copies == cows
+    assert r_ext.generated == _oracle(eng.model, eng.params, ext, 4, 64)
+
+    # (c) divergence inside the donated tail: copy-then-append
+    resident = np.concatenate([seed, first.generated[:-1]])  # 43 donated
+    fork = np.concatenate([resident[:42],
+                           [(resident[42] + 1) % cfg.vocab_size]])
+    h4 = eng.submit(fork, max_new_tokens=4)
+    eng.run_until_drained()
+    r_fork = h4.result()
+    assert r_fork.kv_shared_tokens == 42
+    assert eng.kv.cow_copies == cows + 1
+    assert r_fork.generated == _oracle(eng.model, eng.params, fork, 4, 64)
+
+    # the shared pages' bytes never moved under any of the forks
+    for pid, leaves in zip(shared_pids, snap):
+        for leaf, before in zip(jax.tree.leaves(eng.kv.pools), leaves):
+            np.testing.assert_array_equal(np.asarray(leaf[:, pid]), before)
+
+    s = eng.stats()
+    assert s["kv_prefix_hits"] >= 3 and s["radix_nodes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized stress on the real allocator + radix
+# ---------------------------------------------------------------------------
+
+def test_randomized_alloc_fork_free_evict_stress(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    kv = PagedKVCache(cfg, max_slots=4, max_seq=32, page_size=8,
+                      num_pages=14)
+    idx = PrefixRadixIndex(8)
+    rng = np.random.default_rng(42)
+    # a few base streams plus forks of them → real prefix overlap
+    streams = [rng.integers(0, 97, size=int(n)).astype(np.int32)
+               for n in rng.integers(9, 33, size=4)]
+    streams += [np.concatenate([s[:rng.integers(4, s.size)],
+                                rng.integers(0, 97, size=6)]
+                               ).astype(np.int32)[:32] for s in streams]
+    live = {}
+
+    def check_invariants():
+        assert kv.pages_in_use() == len(kv.page_refs)
+        assert not set(kv.free_pages) & set(kv.page_refs)
+        assert all(r > 0 for r in kv.page_refs.values())
+        for n in idx._nodes:                   # radix pages stay allocated
+            assert n.page in kv.page_refs
+        for slot in live:
+            for p in kv.slot_pages[slot]:
+                assert p in kv.page_refs
+
+    for step in range(300):
+        op = int(rng.integers(0, 4))
+        if op <= 1:                            # admit (with prefix match)
+            toks = streams[int(rng.integers(len(streams)))]
+            m = idx.match(toks)
+            w = min(m.matched_tokens, toks.size - 1)
+            boundary = w // 8
+            pins = list(m.nodes[:boundary])
+            shared = [n.page for n in pins]
+            cow = None
+            if w > boundary * 8:
+                node = m.nodes[boundary] if boundary < len(m.nodes) \
+                    else m.tail
+                cow = node.page
+                pins.append(node)
+            idx.pin(pins)
+            got = kv.alloc(min(toks.size + 1, 32), shared_pages=shared,
+                           cow_src=cow)
+            if got is None:
+                idx.unpin(pins)
+            else:
+                live[got[0]] = (toks, pins)
+        elif op == 2 and live:                 # finish: donate then free
+            slot = int(rng.choice(list(live)))
+            toks, pins = live.pop(slot)
+            idx.insert(toks, kv.slot_pages[slot], kv)
+            idx.unpin(pins)
+            kv.free(slot)
+        elif op == 3:                          # page pressure: evict LRU
+            idx.evict(kv, int(rng.integers(1, 3)))
+        check_invariants()
+
+    for slot in list(live):                    # teardown drains to zero
+        toks, pins = live.pop(slot)
+        idx.unpin(pins)
+        kv.free(slot)
+    idx.clear(kv)
+    assert kv.pages_in_use() == 0 and not kv.page_refs
+    assert sorted(kv.free_pages) == list(range(1, 14))
+
+
+# ---------------------------------------------------------------------------
+# marginal admission, on-demand growth, preemption ladder
+# ---------------------------------------------------------------------------
+
+def test_marginal_admission_reserves_prompt_plus_one(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=2, max_seq=64, page_size=8)
+    eng.submit(np.arange(17, dtype=np.int32) % cfg.vocab_size,
+               max_new_tokens=40)
+    with eng._lock:
+        eng._admit()
+    # 17 prompt + 1 marginal decode token = 3 pages, NOT the 8 pages a
+    # (17+40)-token worst case would reserve — growth is on demand
+    (req,) = eng.active.values()
+    assert len(eng.kv.slot_pages[req.slot]) == 3
+    assert eng.kv.pages_in_use() == 3
+    eng.run_until_drained()
+
+
+def test_growth_preemption_and_qos_under_tight_pool(exact_config):
+    """Two long decoders oversubscribe an 11-page pool: decode pages must
+    grow one at a time, BEST_EFFORT must be preempted (requeued, never
+    dropped) before GUARANTEED ever stalls, and both must finish
+    token-exact — a requeue is a deterministic regeneration."""
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=2, max_seq=64, page_size=8,
+                        num_pages=11)
+    rng = np.random.default_rng(7)
+    pg = rng.integers(0, cfg.vocab_size, size=24)
+    pb = rng.integers(0, cfg.vocab_size, size=24)
+    hg = eng.submit(pg, max_new_tokens=24, qos="guaranteed")
+    hb = eng.submit(pb, max_new_tokens=24, qos="best-effort")
+    done = eng.run_until_drained()
+    assert len(done) == 2 and all(not r.error for r in done)
+    for r in done:
+        want = _oracle(eng.model, eng.params, r.prompt,
+                       len(r.generated), 64)
+        assert r.generated == want, r.qos
+    assert hg.result().qos == "guaranteed" and hb.result().done
+    s = eng.stats()
+    # the pool really was too small for both: the ladder had to act
+    assert s["preemptions"] + s["decode_stalls"] > 0
+    assert s["preemptions"] >= 0 and s["decode_stalls"] >= 0
+
+
+def test_submit_rejects_unknown_qos(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=2, max_seq=64)
+    with pytest.raises(ValueError, match="qos"):
+        eng.submit(np.arange(4, dtype=np.int32), qos="platinum")
+
+
+def test_estimate_marginal_pages_tracks_radix(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    eng = ServingEngine(cfg, max_slots=2, max_seq=64, page_size=8)
+    p = np.random.default_rng(3).integers(0, cfg.vocab_size, size=32)
+    cold = eng.estimate_marginal_pages(p)
+    assert cold == eng.kv.pages_needed(33)
+    eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    warm = eng.estimate_marginal_pages(p)
+    assert 1 <= warm < cold                    # resident prefix is cheap
+    # probing must not mutate the index (touch=False contract)
+    before = eng.prefix.stats()
+    eng.estimate_marginal_pages(p)
+    assert eng.prefix.stats() == before
+
+
+# ---------------------------------------------------------------------------
+# autotuned page geometry + prefill budget (config hook)
+# ---------------------------------------------------------------------------
+
+def test_autotune_page_size_and_budget(exact_config):
+    cfg = exact_config("tinyllama-1.1b")
+    bpt = kv_bytes_per_token(cfg, jnp.float32)
+    assert bpt > 0
+    ps = autotune_page_size(cfg, dtype=jnp.float32)
+    assert ps in (8, 16, 32, 64, 128)
+    assert ps == min((8 << i for i in range(5)),
+                     key=lambda p: abs(p * bpt - 256 * 1024))
+    # a target of exactly 8 tokens' worth of bytes picks the 8-page
+    assert autotune_page_size(cfg, dtype=jnp.float32,
+                              target_page_bytes=bpt * 8) == 8
+
+    eng = ServingEngine(cfg, max_slots=2, max_seq=256, page_size="auto",
+                        prefill_budget="auto")
+    assert eng.kv.page_size == autotune_page_size(cfg, dtype=cfg.cdtype)
+    assert eng.prefill_budget == 2 * eng.chunk_tokens   # provisional
+    eng.warmup()
+    # refined from measured chunk/decode walls: still a whole number of
+    # chunks, clamped to [1, 8] chunks per tick
+    assert eng.prefill_budget % eng.chunk_tokens == 0
+    assert eng.chunk_tokens <= eng.prefill_budget <= 8 * eng.chunk_tokens
+    p = np.random.default_rng(1).integers(0, cfg.vocab_size, size=50)
+    eng.submit(p, max_new_tokens=3)
+    (req,) = eng.run_until_drained()
+    assert req.generated == _oracle(eng.model, eng.params, p, 3, 256)
+
+
+# ---------------------------------------------------------------------------
+# forked-chat fleet replay: page pressure, zero GUARANTEED drops
+# ---------------------------------------------------------------------------
+
+def test_forked_chat_replay_zero_guaranteed_drops(exact_config):
+    from repro.harness import (build_scorecard, forked_chat,
+                               run_fleet_replay)
+
+    cfg = exact_config("tinyllama-1.1b")
+    trace = forked_chat(seed=3, duration_s=5.0, rps=5.0, max_prompt=96,
+                        output_len=4)
+    assert trace.meta["generator"] == "forked-chat"
+    assert any(e.qos == "guaranteed" for e in trace.events)
+    report, router, _system = run_fleet_replay(
+        trace, cfg, replicas=2, speed=4.0, max_slots=4, max_seq=128,
+        engine_kw={"page_size": 16, "num_pages": 24})
+    try:
+        card = build_scorecard(report)
+        g = card["guaranteed"]
+        assert g["total"] > 0
+        assert g["dropped"] == 0, g
+        engines = [r.engine for r in router._replicas.values()]
+        # the forked load really exercised the sharing layer under
+        # pressure: radix hits happened somewhere in the fleet
+        assert sum(e.kv_prefix_hits for e in engines) > 0
+        assert all(e.kv.pages_in_use() == e.prefix.pages
+                   for e in engines)           # drained clean
+    finally:
+        router.shutdown()
