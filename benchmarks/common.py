@@ -29,13 +29,23 @@ def time_samples(fn: Callable, *args, warmup: int = 2, iters: int = 10
 
 
 def stats_suffix(stats, wclass: str = "heavy") -> str:
-    """Render a DispatchStats class summary as CSV derived-column text."""
+    """Render a DispatchStats class summary as CSV derived-column text.
+
+    When a serving engine annotated the stats with speculation counters
+    (``set_extra("speculation", ...)``), the acceptance numbers ride
+    along so fig7/scorecard rows carry them without new plumbing."""
     s = stats.summary()[wclass]
     if not s:
         return "p50_us=n/a"
-    return (f"p50_us={s['p50_wall_s'] * 1e6:.1f};"
-            f"p95_us={s['p95_wall_s'] * 1e6:.1f};"
-            f"p99_us={s['p99_wall_s'] * 1e6:.1f}")
+    out = (f"p50_us={s['p50_wall_s'] * 1e6:.1f};"
+           f"p95_us={s['p95_wall_s'] * 1e6:.1f};"
+           f"p99_us={s['p99_wall_s'] * 1e6:.1f}")
+    spec = stats.extras().get("speculation") if hasattr(stats, "extras") \
+        else None
+    if spec:
+        out += (f";spec_acceptance={spec['acceptance_rate']:.3f};"
+                f"spec_accepted={spec['spec_accepted']}")
+    return out
 
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:

@@ -259,6 +259,13 @@ class ConfigurationManager:
             winner=winner, backup_launched=backup_launched,
             service=dep.service, tenant=dep.spec.tenant,
             replica=dep.name))
+        # executors with their own annotation stream (e.g. a serving
+        # engine's speculation acceptance counters) surface it here so
+        # fig7/scorecards read one DispatchStats, not per-executor ones
+        extras = getattr(dep.executor, "stats_extras", None)
+        if callable(extras):
+            for key, value in extras().items():
+                self.stats.set_extra(key, value)
 
     def submit(self, workload: Workload, args: Tuple = ()) -> DispatchResult:
         t0 = time.monotonic()

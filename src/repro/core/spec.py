@@ -73,6 +73,8 @@ class ServiceSpec:
     qos: QoSClass = QoSClass.BURSTABLE
     donates_inputs: bool = False    # executors donate arg buffers → no
     # speculative re-dispatch of the same args (backups clone instead)
+    kv_dtype: str = "auto"          # serving KV-page dtype ("auto" →
+    # compute dtype; "int8" → quantized pages, ~2x tokens per byte)
 
     def __post_init__(self):
         if self.replicas < 0:
@@ -126,6 +128,7 @@ class ServiceSpec:
             "priority": self.priority,
             "qos": self.qos.value,
             "donates_inputs": self.donates_inputs,
+            "kv_dtype": self.kv_dtype,
         }
 
     @classmethod
@@ -142,7 +145,8 @@ class ServiceSpec:
             tenant=d.get("tenant", "default"),
             priority=d.get("priority", 0),
             qos=QoSClass(d.get("qos", QoSClass.BURSTABLE.value)),
-            donates_inputs=d.get("donates_inputs", False))
+            donates_inputs=d.get("donates_inputs", False),
+            kv_dtype=d.get("kv_dtype", "auto"))
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True)

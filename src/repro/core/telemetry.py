@@ -52,10 +52,24 @@ class DispatchStats:
     def __init__(self):
         self._lock = threading.Lock()
         self.samples: List[DispatchSample] = []
+        # free-form per-subsystem annotations (e.g. the serving engine's
+        # speculation counters) — latest value wins, serialized alongside
+        # the sample summaries so scorecards/fig7 carry them for free
+        self._extra: Dict[str, object] = {}
 
     def record(self, sample: DispatchSample) -> None:
         with self._lock:
             self.samples.append(sample)
+
+    def set_extra(self, key: str, value: object) -> None:
+        """Attach (or refresh) a named annotation block, e.g.
+        ``set_extra("speculation", {...acceptance counters...})``."""
+        with self._lock:
+            self._extra[key] = value
+
+    def extras(self) -> Dict[str, object]:
+        with self._lock:
+            return dict(self._extra)
 
     def __len__(self) -> int:
         with self._lock:
@@ -156,7 +170,7 @@ class DispatchStats:
         """JSON-ready view: the stable ``summary()`` shape (or a windowed
         one), per-tenant and per-replica splits, and the total sample
         count."""
-        return {
+        out = {
             "version": 1,
             "total_samples": len(self),
             "window": window,
@@ -165,6 +179,10 @@ class DispatchStats:
             "per_tenant": self.per_tenant(),
             "per_replica": self.per_replica(),
         }
+        extras = self.extras()
+        if extras:
+            out["extra"] = extras
+        return out
 
     def to_json(self, window: Optional[int] = None,
                 indent: Optional[int] = None) -> str:

@@ -90,19 +90,43 @@ def decode_attention(
 def paged_decode_attention(
     q, k_pages, v_pages, page_table, cache_len, *, softcap: float = 0.0,
     window: int = 0, sm_scale: Optional[float] = None,
-    impl: Optional[str] = None,
+    k_scale=None, v_scale=None, impl: Optional[str] = None,
 ):
     """One-token query [B,Hq,D] against a paged pool [P,page,Hkv,D] gathered
-    through ``page_table`` [B,MP] (see ``serving.kv_cache.PagedKVCache``)."""
+    through ``page_table`` [B,MP] (see ``serving.kv_cache.PagedKVCache``).
+    ``k_scale``/``v_scale`` [P,page,Hkv] dequantize int8 pools in-kernel."""
     mode = _resolve(impl)
     if mode in ("ref", "blocked"):   # gather + dense decode oracle
         return ref.paged_decode_attention(
             q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
-            window=window, sm_scale=sm_scale)
+            window=window, sm_scale=sm_scale,
+            k_scale=k_scale, v_scale=v_scale)
     from repro.kernels import paged_decode_attention as pda
     return pda.paged_decode_attention(
         q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
-        window=window, sm_scale=sm_scale, interpret=(mode == "interpret"))
+        window=window, sm_scale=sm_scale, k_scale=k_scale, v_scale=v_scale,
+        interpret=(mode == "interpret"))
+
+
+def paged_verify_attention(
+    q, k_pages, v_pages, page_table, cache_len, *, softcap: float = 0.0,
+    window: int = 0, sm_scale: Optional[float] = None,
+    k_scale=None, v_scale=None, impl: Optional[str] = None,
+):
+    """K1-token query [B,K1,Hq,D] (the K1 newest cache slots) against a
+    paged pool — the speculative-decoding verify pass: one kernel launch
+    scores the draft's k proposals plus the resumption position."""
+    mode = _resolve(impl)
+    if mode in ("ref", "blocked"):   # gather + dense mha oracle
+        return ref.paged_verify_attention(
+            q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
+            window=window, sm_scale=sm_scale,
+            k_scale=k_scale, v_scale=v_scale)
+    from repro.kernels import paged_verify_attention as pva
+    return pva.paged_verify_attention(
+        q, k_pages, v_pages, page_table, cache_len, softcap=softcap,
+        window=window, sm_scale=sm_scale, k_scale=k_scale, v_scale=v_scale,
+        interpret=(mode == "interpret"))
 
 
 # ---------------------------------------------------------------------------

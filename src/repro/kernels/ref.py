@@ -112,6 +112,13 @@ def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     return g.reshape(B, MP * page, *g.shape[3:])
 
 
+def dequantize_pages(pages: jax.Array, scale: jax.Array) -> jax.Array:
+    """int8 page pool ``[P, page, Hkv, D]`` + per-token scales
+    ``[P, page, Hkv]`` → float32 pool.  The exact inverse of the
+    quantization done on page write (``models.attention._quantize``)."""
+    return pages.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
 def paged_decode_attention(
     q: jax.Array,                  # [B, Hq, D]
     k_pages: jax.Array,            # [P, page, Hkv, D] physical page pool
@@ -122,12 +129,47 @@ def paged_decode_attention(
     softcap: float = 0.0,
     window: int = 0,
     sm_scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,   # [P, page, Hkv] f32 (int8 pools)
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Oracle: gather the pages into a dense cache, then dense decode."""
+    if k_scale is not None:
+        k_pages = dequantize_pages(k_pages, k_scale)
+        v_pages = dequantize_pages(v_pages, v_scale)
     k = gather_pages(k_pages, page_table)
     v = gather_pages(v_pages, page_table)
     return decode_attention(q, k, v, cache_len, softcap=softcap,
                             window=window, sm_scale=sm_scale)
+
+
+def paged_verify_attention(
+    q: jax.Array,                  # [B, K1, Hq, D] the K1 newest tokens
+    k_pages: jax.Array,            # [P, page, Hkv, D] physical page pool
+    v_pages: jax.Array,            # [P, page, Hkv, Dv]
+    page_table: jax.Array,         # [B, MP] int32
+    cache_len: jax.Array,          # [B] valid tokens (incl. all K1 new ones)
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,   # [P, page, Hkv] f32 (int8 pools)
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Oracle for the speculative verify pass: gather the pages dense,
+    then causal ``mha`` with query i at absolute position
+    ``cache_len - K1 + i`` (the K1 queries occupy the last K1 slots)."""
+    if k_scale is not None:
+        k_pages = dequantize_pages(k_pages, k_scale)
+        v_pages = dequantize_pages(v_pages, v_scale)
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    B, K1 = q.shape[0], q.shape[1]
+    S = k.shape[1]
+    q_pos = cache_len[:, None] - K1 + jnp.arange(K1)[None, :]
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return mha(q, k, v, causal=True, window=window, softcap=softcap,
+               q_positions=q_pos, kv_positions=kv_pos,
+               kv_valid_len=cache_len, sm_scale=sm_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -107,13 +107,25 @@ def init_paged_pool(cfg: ModelConfig, num_pages: int, page_size: int,
     ``page_size`` tokens each, shared by every sequence through per-request
     page tables.  Physical page 0 is the allocator's trash page (masked
     writes land there), so usable capacity is ``num_pages - 1`` pages.
-    Standard attention only — MLA/SWA/SSM keep the dense slot cache."""
+    Standard attention only — MLA/SWA/SSM keep the dense slot cache.
+
+    ``dtype=jnp.int8`` selects quantized pages: int8 KV plus per-token
+    float32 dequant scales (``k_scale``/``v_scale`` [P, page, Hkv]).
+    Per-token (not per-page-scalar) scales let the incremental
+    scatter-on-write path quantize each token independently — no
+    page-wide requantization when a decode step appends to a partially
+    filled page — at a cost of 4/head_dim bytes per cached byte."""
     assert cfg.attn_type == "full", cfg.attn_type
     hd = cfg.head_dim_
-    return {
+    pool = {
         "k": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
         "v": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd), dtype),
     }
+    if dtype == jnp.int8:
+        shape = (num_pages, page_size, cfg.num_kv_heads)
+        pool["k_scale"] = jnp.zeros(shape, jnp.float32)
+        pool["v_scale"] = jnp.zeros(shape, jnp.float32)
+    return pool
 
 
 # ---------------------------------------------------------------------------
@@ -243,12 +255,23 @@ def _fill_cache_mla(cache, c_kv, k_rope, positions):
 # paged / chunked prefill + decode
 # ---------------------------------------------------------------------------
 
+def _quantize(x: jax.Array):
+    """Per-token symmetric int8 quantization over the head dim:
+    ``scale = amax/127`` per (token, head), ``q = round(x/scale)``.
+    Exact inverse lives in ``kernels.ref.dequantize_pages``."""
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
 def _page_scatter(pool, k, v, page_table, positions, valid_len):
     """Write chunk KV [B, T, H, D] into the pool at the logical positions'
     pages.  Padded tokens (``positions >= valid_len``) AND positions past
     the table's span (a decode step at a full ``max_seq`` cache) are
     redirected to physical page 0 — the trash page — so neither bucket
-    padding nor an out-of-range append can corrupt a live page."""
+    padding nor an out-of-range append can corrupt a live page.
+    int8 pools quantize on write (per-token scales ride along)."""
     ps = pool["k"].shape[1]
     MP = page_table.shape[1]
     lpage_raw = positions // ps                           # [B, T]
@@ -257,6 +280,14 @@ def _page_scatter(pool, k, v, page_table, positions, valid_len):
     pids = jnp.where(valid, jnp.take_along_axis(page_table, lpage, axis=1), 0)
     offs = jnp.where(valid, positions % ps, 0)
     pool = dict(pool)
+    if "k_scale" in pool:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        pool["k"] = pool["k"].at[pids, offs].set(kq)
+        pool["v"] = pool["v"].at[pids, offs].set(vq)
+        pool["k_scale"] = pool["k_scale"].at[pids, offs].set(ks)
+        pool["v_scale"] = pool["v_scale"].at[pids, offs].set(vs)
+        return pool
     pool["k"] = pool["k"].astype(k.dtype).at[pids, offs].set(k)
     pool["v"] = pool["v"].astype(v.dtype).at[pids, offs].set(v)
     return pool
@@ -278,6 +309,12 @@ def prefill_chunk_paged(params, x, cfg: ModelConfig, pool, page_table,
     pool = _page_scatter(pool, k, v, page_table, positions, new_len)
     kd = gather_pages(pool["k"], page_table)              # [B, MP*ps, H, D]
     vd = gather_pages(pool["v"], page_table)
+    if "k_scale" in pool:
+        kd = (kd.astype(jnp.float32)
+              * gather_pages(pool["k_scale"], page_table)[..., None])
+        vd = (vd.astype(jnp.float32)
+              * gather_pages(pool["v_scale"], page_table)[..., None])
+        kd, vd = kd.astype(dt), vd.astype(dt)
     B, S = kd.shape[0], kd.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     o = ops.flash_attention(q, kd, vd, causal=True, window=0,
@@ -325,8 +362,36 @@ def decode_step_paged(
     pool = _page_scatter(pool, k, v, page_table, positions, cache_len + 1)
     o = ops.paged_decode_attention(
         q[:, 0], pool["k"], pool["v"], page_table, cache_len + 1,
-        softcap=cfg.attn_logit_softcap)
+        softcap=cfg.attn_logit_softcap,
+        k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"))
     return _out_proj(params, o[:, None], cfg), pool
+
+
+def verify_step_paged(
+    params,
+    x: jax.Array,                     # [B, K1, d] draft tokens + resumption
+    cfg: ModelConfig,
+    pool: dict,
+    page_table: jax.Array,            # [B, MP]
+    cache_len: jax.Array,             # [B] tokens already in cache
+):
+    """Multi-token verify against the paged pool (speculative decoding):
+    append all K1 new tokens' KV at positions ``cache_len .. cache_len+K1-1``
+    through the page table, then score every position in ONE
+    ``paged_verify_attention`` launch with a causal intra-chunk mask.
+    The engine truncates rejected tokens afterwards by simply winding
+    ``cache_len`` back — KV past the valid length is masked garbage."""
+    dt = cfg.cdtype
+    x = x.astype(dt)
+    K1 = x.shape[1]
+    positions = cache_len[:, None] + jnp.arange(K1)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions)
+    pool = _page_scatter(pool, k, v, page_table, positions, cache_len + K1)
+    o = ops.paged_verify_attention(
+        q, pool["k"], pool["v"], page_table, cache_len + K1,
+        softcap=cfg.attn_logit_softcap,
+        k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"))
+    return _out_proj(params, o, cfg), pool
 
 
 # ---------------------------------------------------------------------------

@@ -163,6 +163,21 @@ class Model:
         logits = apply_lm_head(params["embed"], params.get("head"), x, cfg)
         return logits[:, 0], caches
 
+    def verify_paged(self, params: Params, tokens: jax.Array, caches: Params,
+                     page_table: jax.Array, cache_len: jax.Array):
+        """Speculative verify step against paged KV pools.  tokens:
+        [B, K1] int32 (the last committed token + the draft's k proposals)
+        → (logits [B, K1, V], caches).  All K1 tokens' KV is appended at
+        ``cache_len .. cache_len+K1-1``; the caller winds ``cache_len``
+        back past any rejected suffix (stale KV is masked garbage)."""
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], tokens, cfg)
+        x, _, caches = transformer.forward_stack(
+            params["stack"], x, cfg, positions=None, mode="verify",
+            caches=caches, cache_len=cache_len, page_table=page_table)
+        logits = apply_lm_head(params["embed"], params.get("head"), x, cfg)
+        return logits, caches
+
     def prefill(self, params: Params, batch: Dict[str, jax.Array],
                 caches: Params, positions: Optional[jax.Array] = None,
                 last_index: Optional[jax.Array] = None):

@@ -64,6 +64,10 @@ def _attn_call(bp, x, cfg, positions, cache, cache_len, mode,
         if mode == "decode":
             return attention.decode_step_paged(bp["attn"], x, cfg, cache,
                                                page_table, cache_len)
+        if mode == "verify":
+            # speculative verify: all K1 draft/resumption tokens in one pass
+            return attention.verify_step_paged(bp["attn"], x, cfg, cache,
+                                               page_table, cache_len)
         return attention.prefill_chunk_paged(bp["attn"], x, cfg, cache,
                                              page_table, positions, cache_len)
     if mode == "decode":
@@ -301,7 +305,7 @@ def forward_stack(
     cfg: ModelConfig,
     *,
     positions: jax.Array,
-    mode: str = "train",                    # train | prefill | decode
+    mode: str = "train",                    # train | prefill | decode | verify
     caches: Optional[Params] = None,
     cache_len: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None,  # [B, MP] → paged attn caches
@@ -309,7 +313,9 @@ def forward_stack(
 ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
     """Returns (hidden, aux_loss, new_caches)."""
     fam = cfg.family
-    assert mode in ("train", "prefill", "decode")
+    assert mode in ("train", "prefill", "decode", "verify")
+    assert mode != "verify" or page_table is not None, \
+        "verify mode is paged-only (speculative decoding)"
     if page_table is not None:
         assert fam in ("dense", "encoder", "moe"), \
             f"paged attention unsupported for family {fam!r}"

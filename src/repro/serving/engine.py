@@ -112,6 +112,9 @@ class Request:
     # pages, and how many prompt tokens prefill skipped via the match
     shared_nodes: List[Any] = dataclasses.field(default_factory=list)
     kv_shared_tokens: int = 0
+    # speculative decoding: running acceptance-rate EMA driving this
+    # request's preferred draft length k (0.5 = neutral prior)
+    spec_ema: float = 0.5
 
 
 def slo_slack(req: Request, now: float) -> float:
@@ -174,7 +177,11 @@ class ServingEngine:
                  prefill_chunk: int = 64,
                  prefill_budget=None,
                  prefix_sharing: bool = True,
-                 replica_id: str = ""):
+                 replica_id: str = "",
+                 kv_dtype: str = "auto",
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params: Optional[Any] = None,
+                 spec_k_max: int = 4):
         self.cfg = cfg
         self.replica_id = replica_id     # fleet membership tag ("" = solo)
         self.model = build_model(cfg)
@@ -193,17 +200,26 @@ class ServingEngine:
         self.paged = paged_capable if paged is None \
             else bool(paged) and paged_capable
         if self.paged:
+            # "auto" keeps the compute dtype; "int8" switches the pools to
+            # per-token-quantized pages (~half the bytes per cached token,
+            # dequantized inside the paged kernels' gather)
+            kv_dt = cfg.cdtype if kv_dtype == "auto" else jnp.dtype(kv_dtype)
+            self.kv_dtype = kv_dt
             if page_size == "auto":
                 # config hook: size pages from the arch's measured KV
                 # bytes-per-token instead of the hardcoded default
-                page_size = autotune_page_size(cfg, dtype=cfg.cdtype)
-            # pools live in the compute dtype so the scatter never has to
-            # re-materialize them and buffer donation stays in place
+                page_size = autotune_page_size(cfg, dtype=kv_dt)
+            # pools live in the serving KV dtype so the scatter never has
+            # to re-materialize them and buffer donation stays in place
             self.kv: Any = PagedKVCache(cfg, max_slots, max_seq,
                                         page_size=page_size,
                                         num_pages=num_pages,
-                                        dtype=cfg.cdtype)
+                                        dtype=kv_dt)
         else:
+            if kv_dtype != "auto":
+                raise ValueError(
+                    "kv_dtype is a paged-data-plane knob; the dense slot "
+                    "cache serves in the compute dtype")
             self.kv = SlotKVCache(cfg, max_slots, max_seq)
 
         # ---- prefix sharing (paged only): radix index + COW accounting --
@@ -253,7 +269,8 @@ class ServingEngine:
             maxlen=256)
         self.prefix_hits = 0
         self.prefix_misses = 0
-        # per-tick (prefill_s, decode_s, prefill_tokens, decode_rows)
+        # per-tick (prefill_s, decode_s, prefill_tokens, decode_rows,
+        # decode_tokens) — tokens > rows on speculative ticks
         self._tick_log: collections.deque = collections.deque(maxlen=512)
         self._warm = False
         self.warmup_s = 0.0
@@ -265,6 +282,37 @@ class ServingEngine:
         self._tick = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
         self._running = False
+
+        # ---- speculative decoding (paged only) -------------------------
+        # a small draft model proposes k tokens per tick; the target
+        # verifies all k+1 in ONE paged pass and commits the accepted
+        # prefix + its own correction token.  Greedy output is token-exact
+        # regardless of the draft, so this is pure throughput.
+        self.spec_k_max = int(spec_k_max)
+        self._draft = None
+        self._spec_disabled_reason: Optional[str] = None
+        self.spec_proposed = 0        # draft tokens offered to the target
+        self.spec_accepted = 0        # draft tokens the target kept
+        self.spec_rounds = 0          # verify launches
+        self.draft_ticks = 0          # draft propose launches
+        if draft_cfg is not None:
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding needs the paged data plane "
+                    f"(family={cfg.family!r}, attn={cfg.attn_type!r})")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}: the models must share a tokenizer")
+            if self.spec_k_max < 1:
+                raise ValueError(f"spec_k_max must be >= 1, "
+                                 f"got {spec_k_max}")
+            from repro.serving.spec_decode import DraftSpeculator
+            self._draft = DraftSpeculator(draft_cfg, max_slots, max_seq,
+                                          params=draft_params,
+                                          seed=seed + 1)
+            self._verify = jax.jit(self._verify_paged_fn,
+                                   donate_argnums=(1,))
 
         # `_decode` is ALWAYS the live decode callable (paged or dense) —
         # tests and tooling monkeypatch it by name
@@ -324,6 +372,30 @@ class ServingEngine:
         new_len = jnp.where(active, cache_len + 1, cache_len)
         return next_tokens, pools, new_len
 
+    def _verify_paged_fn(self, params, pools, page_table, tokens_blk,
+                         cache_len, last_tokens, active):
+        """Target-verify one speculative block.
+
+        ``tokens_blk`` [B, K1=k+1] is ``[last, d1..dk]`` per row.  The
+        target scores all K1 positions in one paged pass (their KV lands
+        at ``cache_len..cache_len+k``); ``acc`` counts the leading drafts
+        that match the target's greedy choice, and the committed batch is
+        the accepted prefix plus the target's own token at the first
+        disagreement (= plain greedy continuation when a == k).  The new
+        length winds back past the rejected suffix — the stale KV beyond
+        it is masked garbage the next tick overwrites.
+        """
+        logits, pools = self.model.verify_paged(params, tokens_blk, pools,
+                                                page_table, cache_len)
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # [B, K1]
+        match = (tgt[:, :-1] == tokens_blk[:, 1:]).astype(jnp.int32)
+        acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)         # [B]
+        acc = jnp.where(active, acc, 0)
+        new_len = jnp.where(active, cache_len + 1 + acc, cache_len)
+        nxt = jnp.take_along_axis(tgt, acc[:, None], axis=1)[:, 0]
+        nxt = jnp.where(active, nxt, last_tokens)
+        return tgt, acc, nxt, pools, new_len
+
     # ------------------------------------------------------------- warmup
     def warmup(self) -> "ServingEngine":
         """Pre-compile the decode step and every prefill chunk bucket so
@@ -370,6 +442,32 @@ class ServingEngine:
                 self.kv.pools = pools
                 self.kv.cache_len = clen
                 self.last_tokens = toks
+                if self._draft is not None:
+                    # every speculative depth k the adaptive policy can
+                    # pick compiles its own (propose, verify) pair — all
+                    # state-neutral under the all-inactive mask, like the
+                    # decode warmup above
+                    inactive = jnp.zeros((self.max_slots,), bool)
+                    for kk in range(1, self.spec_k_max + 1):
+                        drafts = self._draft.propose(self.last_tokens,
+                                                     inactive, kk)
+                        blk = jnp.concatenate(
+                            [self.last_tokens[:, None], drafts], axis=1)
+                        _, _, nxt, pools, clen = self._verify(
+                            self.params, self.kv.pools, self.kv.page_table,
+                            blk, self.kv.cache_len, self.last_tokens,
+                            inactive)
+                        self.kv.pools = pools
+                        self.kv.cache_len = clen
+                        self.last_tokens = nxt
+                    # draft prompt-prefill buckets; slot 0's draft state is
+                    # scratch until a real insert overwrites it — zero the
+                    # length back so nothing looks resident
+                    for b in self.buckets:
+                        self._draft.prefill(
+                            np.zeros((min(b, self.max_seq),), np.int32), 0)
+                    self._draft.kv.cache_len = jnp.zeros_like(
+                        self._draft.kv.cache_len)
             else:
                 if self._chunkable_stateful:
                     staging = self.model.init_caches(1, self.max_seq)
@@ -858,6 +956,17 @@ class ServingEngine:
         else:
             self.kv.insert(pcache, req.slot, plen)
         self.last_tokens = self.last_tokens.at[req.slot].set(first)
+        if self._draft is not None and req.max_new_tokens > 1:
+            # mirror the prompt into the draft's slot cache so the first
+            # speculative tick starts in sync (draft clen == target clen,
+            # same pending token).  A draft-side failure never fails the
+            # request — speculation just turns itself off.
+            try:
+                self._draft.prefill(req.prompt, req.slot)
+            except Exception as e:  # noqa: BLE001 — draft state is its own
+                # tree; the target's pools are untouched
+                self._draft = None
+                self._spec_disabled_reason = f"draft prefill: {e}"
         req.generated.append(first)
         now = time.monotonic()
         req.first_token_at = now
@@ -931,14 +1040,19 @@ class ServingEngine:
         self._requeue(victim)
         return victim
 
-    def _grow_decode_pages(self, dec: List[Request]) -> set:
+    def _grow_decode_pages(self, dec: List[Request], span: int = 1) -> set:
         """Grow each decoding row that is about to write past its last
         page (one page at a time — marginal footprint).  A dry pool
         reclaims in order: LRU radix eviction, then BEST_EFFORT-style
         preemption of a strictly-lower-QoS request; a row that still can't
         get a page is *stalled* for this tick (masked inactive — its
         unallocated logical page maps to table entry 0, the trash page, so
-        even a stray write is harmless).  Returns the stalled rids."""
+        even a stray write is harmless).  Returns the stalled rids.
+
+        ``span`` is how many consecutive KV positions the tick writes: 1
+        for plain decode, k+1 for a speculative tick (pending token + k
+        draft proposals), which can cross more than one page boundary.
+        """
         stalled = set()
         order = sorted(dec, key=lambda r: (-_QOS_RANK.get(r.qos, 1),
                                            r.admitted_at or 0.0))
@@ -951,15 +1065,22 @@ class ServingEngine:
             pos = len(req.prompt) + len(req.generated) - 1
             if pos >= self.max_seq:
                 continue
-            if pos // self.kv.page_size < len(self.kv.slot_pages[req.slot]):
-                continue
-            if self.kv.append_page(req.slot) is not None:
-                continue
-            if self.prefix is not None and self.prefix.evict(self.kv, 1):
+            last = min(pos + span - 1, self.max_seq - 1)
+            need = last // self.kv.page_size + 1
+            ok = True
+            while len(self.kv.slot_pages[req.slot]) < need:
                 if self.kv.append_page(req.slot) is not None:
                     continue
-            if self._preempt_for(req) is not None and \
-                    self.kv.append_page(req.slot) is not None:
+                if self.prefix is not None and \
+                        self.prefix.evict(self.kv, 1) and \
+                        self.kv.append_page(req.slot) is not None:
+                    continue
+                if self._preempt_for(req) is not None and \
+                        self.kv.append_page(req.slot) is not None:
+                    continue
+                ok = False
+                break
+            if ok:
                 continue
             stalled.add(req.rid)
             self.decode_stalls += 1
@@ -981,17 +1102,127 @@ class ServingEngine:
                     stalled.discard(req.rid)
         return stalled
 
+    # -------------------------------------------------- speculative decode
+    def _spec_k(self, dec: List[Request]) -> int:
+        """Batch draft length for this tick: the min over rows of each
+        request's EMA-preferred k, clamped so the k+1 verify positions fit
+        under ``max_seq`` for every row (conservative batch-min keeps one
+        launch shape; near-capacity rows drag k down only near the end of
+        their sequence).  < 1 → the caller falls back to a normal tick."""
+        k = self.spec_k_max
+        for r in dec:
+            pos = len(r.prompt) + len(r.generated) - 1
+            room = self.max_seq - 1 - pos     # need pos + k <= max_seq - 1
+            pref = max(1, round(r.spec_ema * self.spec_k_max))
+            k = min(k, pref, room)
+        return k
+
+    def _spec_decode_tick(self, dec: List[Request],
+                          k: int) -> Optional[Tuple[int, int]]:
+        """One speculative tick: the draft proposes k tokens per decoding
+        row, the target verifies all k+1 positions in one paged pass, and
+        the accepted prefix plus the target's correction token commit in
+        bulk.  Returns ``(rows, committed_tokens)``, or ``None`` when the
+        draft died — speculation disables itself and the caller serves the
+        batch with the normal tick instead."""
+        stalled = self._grow_decode_pages(dec, span=k + 1)
+        dec = [r for r in dec if r.rid in self.active
+               and r.phase == "decode" and r.rid not in stalled]
+        if not dec:
+            return 0, 0
+        active_mask = np.zeros((self.max_slots,), bool)
+        for req in dec:
+            active_mask[req.slot] = True
+        active = jnp.asarray(active_mask)
+        try:
+            drafts = self._draft.propose(self.last_tokens, active, k)
+            self.draft_ticks += 1
+        except Exception as e:  # noqa: BLE001 — the draft donates only its
+            # own cache tree; the target's pools are untouched, so drop to
+            # non-speculative serving instead of failing the batch
+            self._draft = None
+            self._spec_disabled_reason = f"draft propose: {e}"
+            return None
+        tokens_blk = jnp.concatenate([self.last_tokens[:, None], drafts],
+                                     axis=1)
+        try:
+            tgt, acc, nxt, pools, new_len = self._verify(
+                self.params, self.kv.pools, self.kv.page_table, tokens_blk,
+                self.kv.cache_len, self.last_tokens, active)
+            self.kv.pools = pools
+            self.kv.cache_len = new_len
+        except Exception as e:  # noqa: BLE001 — verify donates the SHARED
+            # pools: same blast radius as the normal decode error path
+            for req in list(self.active.values()):
+                self._release(req)
+                del self.active[req.rid]
+                self._fail(req, e)
+            return 0, 0
+        self._draft.observe(new_len, active)
+        self.last_tokens = nxt
+        # ONE device sync per tick (not one per request)
+        tgt_np = np.asarray(tgt)
+        drafts_np = np.asarray(drafts)
+        accs = np.asarray(acc)
+        clens = np.asarray(self.kv.cache_len)
+        now = time.monotonic()
+        committed_total = 0
+        finished = []
+        for req in dec:
+            a = int(accs[req.slot])
+            committed = [int(x) for x in drafts_np[req.slot, :a]]
+            committed.append(int(tgt_np[req.slot, a]))
+            self.spec_proposed += k
+            self.spec_accepted += a
+            req.spec_ema = 0.7 * req.spec_ema + 0.3 * (a / k)
+            for t in committed:
+                req.generated.append(t)
+                committed_total += 1
+                if (req.eos_token is not None and t == req.eos_token) or \
+                        len(req.generated) >= req.max_new_tokens:
+                    finished.append(req)
+                    break
+            else:
+                if int(clens[req.slot]) >= self.kv.max_seq - 1:
+                    finished.append(req)
+        self.spec_rounds += 1
+        self.dispatch_stats.set_extra("speculation", {
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "acceptance_rate": self.spec_accepted / self.spec_proposed
+            if self.spec_proposed else 0.0,
+            "draft_ticks": self.draft_ticks,
+        })
+        for req in finished:
+            self._finish(req, now)
+        return len(dec), committed_total
+
     # ------------------------------------------------------- decode phase
-    def _decode_tick(self) -> int:
+    def _decode_tick(self) -> Tuple[int, int]:
+        """Advance the decode batch once; returns (rows, tokens committed).
+        A speculative tick commits up to k+1 tokens per row; the normal
+        tick commits exactly one."""
         dec = [r for r in self.active.values() if r.phase == "decode"]
         if not dec:
-            return 0
+            return 0, 0
+        if self._draft is not None and self.paged:
+            k = self._spec_k(dec)
+            if k >= 1:
+                out = self._spec_decode_tick(dec, k)
+                if out is not None:
+                    return out
+                # draft died mid-tick: recompute the batch (growth above
+                # may have requeued rows) and serve it non-speculatively
+                dec = [r for r in self.active.values()
+                       if r.phase == "decode"]
+                if not dec:
+                    return 0, 0
         if self.paged:
             stalled = self._grow_decode_pages(dec)
             dec = [r for r in dec if r.rid in self.active
                    and r.phase == "decode" and r.rid not in stalled]
             if not dec:
-                return 0
+                return 0, 0
         active_mask = np.zeros((self.max_slots,), bool)
         for req in dec:
             active_mask[req.slot] = True
@@ -1015,7 +1246,7 @@ class ServingEngine:
                 self._release(req)
                 del self.active[req.rid]
                 self._fail(req, e)
-            return 0
+            return 0, 0
         self.last_tokens = tokens
         toks = np.asarray(tokens)
         # ONE device sync per tick (not one per request)
@@ -1033,7 +1264,7 @@ class ServingEngine:
                 finished.append(req)
         for req in finished:
             self._finish(req, now)
-        return len(dec)
+        return len(dec), len(dec)
 
     # ---------------------------------------------------------------- tick
     def step(self) -> int:
@@ -1052,12 +1283,12 @@ class ServingEngine:
             t0 = time.monotonic()
             prefill_tokens = self._prefill_tick()
             t1 = time.monotonic()
-            decode_rows = self._decode_tick()
+            decode_rows, decode_tokens = self._decode_tick()
             t2 = time.monotonic()
             if prefill_tokens or decode_rows:
                 self.ticks += 1
                 self._tick_log.append((t1 - t0, t2 - t1, prefill_tokens,
-                                       decode_rows))
+                                       decode_rows, decode_tokens))
             self._tick.notify_all()
             return len(self.active)
 
@@ -1102,6 +1333,15 @@ class ServingEngine:
             return list(self.completed.values())
 
     # ------------------------------------------------------------------
+    def spec_overhead_bytes(self) -> int:
+        """Draft-side HBM the speculator adds (draft params + its dense
+        slot cache); 0 when speculation is off.  Charged into the
+        executor's footprint so admission/QoS arbitrates draft capacity
+        like any other tenant demand."""
+        with self._lock:
+            d = self._draft
+        return d.footprint_bytes() if d is not None else 0
+
     def stats(self) -> Dict[str, float]:
         with self._lock:
             done = list(self.completed.values())
@@ -1124,7 +1364,19 @@ class ServingEngine:
                 "kv_dense_equivalent_bytes":
                     self.kv.dense_equivalent_bytes(),
             }
+            # speculative decoding surface (zeros while disabled/off)
+            out["speculative"] = self._draft is not None
+            out["spec_proposed"] = self.spec_proposed
+            out["spec_accepted"] = self.spec_accepted
+            out["acceptance_rate"] = (self.spec_accepted /
+                                      self.spec_proposed
+                                      if self.spec_proposed else 0.0)
+            out["spec_rounds"] = self.spec_rounds
+            out["draft_ticks"] = self.draft_ticks
+            if self._spec_disabled_reason:
+                out["spec_disabled_reason"] = self._spec_disabled_reason
             if self.paged:
+                out["kv_dtype"] = str(jnp.dtype(self.kv_dtype))
                 out["pages_in_use"] = self.kv.pages_in_use()
                 out["page_utilization"] = self.kv.page_utilization()
                 out["cow_copies"] = self.kv.cow_copies
@@ -1142,14 +1394,19 @@ class ServingEngine:
         if recent:
             out["p95_queue_recent_s"] = percentile(recent, 95)
         # prefill-vs-decode tick-time split (only ticks that did the work)
-        pre = [p for p, _d, ptoks, _n in ticks if ptoks]
-        dec = [d for _p, d, _t, n in ticks if n]
-        for name, xs in (("prefill_tick_s", pre), ("decode_tick_s", dec)):
+        pre = [p for p, _d, ptoks, _n, _tk in ticks if ptoks]
+        dec = [d for _p, d, _t, n, _tk in ticks if n]
+        # per-committed-token decode latency: the spec-vs-baseline metric
+        # (a speculative tick's wall amortizes over its committed tokens)
+        dec_tok = [d / tk for _p, d, _t, n, tk in ticks if n and tk]
+        for name, xs in (("prefill_tick_s", pre), ("decode_tick_s", dec),
+                         ("decode_s_per_token", dec_tok)):
             if xs:
                 for q in (50, 95):
                     out[f"p{q}_{name}"] = percentile(xs, q)
         if ticks:
             out["max_prefill_tokens_tick"] = max(t[2] for t in ticks)
+            out["decode_tokens_committed"] = sum(t[4] for t in ticks)
         ttfts = [r.first_token_at - r.submitted_at for r in done
                  if r.first_token_at is not None]
         queued = [r.admitted_at - r.submitted_at for r in done
@@ -1193,9 +1450,15 @@ class EngineExecutor(BaseExecutor):
         self.engine = engine
         self.autostart = autostart
         self.result_timeout = result_timeout
-        # params are fixed at engine init — size them once, not per dispatch
+        # params are fixed at engine init — size them once, not per
+        # dispatch.  The speculator's draft (params + dense slot cache) is
+        # part of the reservation: admission/QoS charges draft capacity
+        # like any other demand, and the charge is sized at init so a
+        # mid-service speculation disable doesn't shrink a placed
+        # footprint out from under the orchestrator.
         self._params_bytes = _tree_bytes(self.engine.params)
-        self._footprint = self._params_bytes + \
+        self._spec_bytes = self.engine.spec_overhead_bytes()
+        self._footprint = self._params_bytes + self._spec_bytes + \
             self.engine.kv.capacity_bytes()
 
     def footprint_bytes(self) -> int:
@@ -1203,7 +1466,8 @@ class EngineExecutor(BaseExecutor):
 
     def dynamic_footprint_bytes(self) -> int:
         """Live HBM commitment: params + KV pages (or slots) in use."""
-        return self._params_bytes + self.engine.kv.bytes_in_use()
+        return self._params_bytes + self._spec_bytes + \
+            self.engine.kv.bytes_in_use()
 
     def can_run(self, workload: Workload, args) -> bool:
         if workload.kind not in (WorkloadKind.PREFILL, WorkloadKind.DECODE,
@@ -1233,3 +1497,8 @@ class EngineExecutor(BaseExecutor):
         self.history.append(DispatchRecord(workload.name,
                                            time.monotonic() - t0, False))
         return req
+
+    def stats_extras(self) -> Dict[str, object]:
+        """Engine-side annotations (speculation acceptance counters) for
+        the manager to merge into the system-wide ``DispatchStats``."""
+        return self.engine.dispatch_stats.extras()

@@ -131,7 +131,9 @@ def make_engine_builder(cfg, max_slots: int = 4, max_seq: int = 128,
     requests; ``autostart=False`` keeps the engine caller-driven (each
     blocked ``dispatch`` steps the shared engine inline).  ``engine_kw``
     passes the paged-data-plane knobs through (``paged``, ``page_size``,
-    ``num_pages``, ``prefill_chunk``, ``prefill_budget``)."""
+    ``num_pages``, ``prefill_chunk``, ``prefill_budget``,
+    ``kv_dtype`` for int8 quantized pages, and the speculative-decoding
+    trio ``draft_cfg``/``draft_params``/``spec_k_max``)."""
     from repro.serving.engine import EngineExecutor, ServingEngine
 
     def builder(workload: Workload, mesh) -> Tuple[BaseExecutor, int]:
@@ -164,12 +166,15 @@ def fleet_service_spec(cfg, name: str = "fleet", replicas: int = 2,
                        tenant: str = "default", qos=None,
                        latency_slo_ms: float = 0.0,
                        max_new_tokens: int = 16,
-                       priority: int = 0) -> ServiceSpec:
+                       priority: int = 0,
+                       kv_dtype: str = "auto") -> ServiceSpec:
     """Declarative manifest for a replicated engine fleet.
 
     ``est_flops`` is floored at 1e10 so the workload classifies HEAVY
     (container-class) regardless of how small a reduced test config is —
-    fleet replicas are always engine-backed containers."""
+    fleet replicas are always engine-backed containers.  ``kv_dtype``
+    declares the replicas' KV-page precision ("int8" ≈ 2x page-pool
+    tokens per byte); builders pass it to ``ServingEngine``."""
     from repro.core.spec import QoSClass
 
     return ServiceSpec(
@@ -182,7 +187,8 @@ def fleet_service_spec(cfg, name: str = "fleet", replicas: int = 2,
         executor_class=ExecutorClass.CONTAINER,
         replicas=replicas, tenant=tenant,
         qos=qos if qos is not None else QoSClass.BURSTABLE,
-        priority=priority, latency_slo_ms=latency_slo_ms)
+        priority=priority, latency_slo_ms=latency_slo_ms,
+        kv_dtype=kv_dtype)
 
 
 def assemble_edge_system(system, heavy_cfg, light_cfg=None, scfg=None,
